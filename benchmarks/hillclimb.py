@@ -1,0 +1,100 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb measurement matrix for the three chosen (arch x shape)
+pairs (EXPERIMENTS.md §Perf):
+
+  qwen2-moe-a2.7b  x train_4k   — the paper's own model; most collective-bound
+  mistral-large-123b x train_4k — largest assigned model
+  zamba2-7b        x train_4k   — worst baseline roofline fraction
+
+Variants per cell: baseline / +seq-parallel / +32k-token microbatches /
++both; mistral additionally +HSDP on the multi-pod mesh.  For each variant we
+record the HLO-parsed per-device collective bytes (comparable across variants
+once scaled by the known scan trip counts) and the analytic roofline terms
+under the same assumptions.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --out hillclimb_results.json
+"""
+import argparse
+import json
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import lower_cell
+from benchmarks import roofline as rl
+
+CELLS = [("qwen2-moe-a2.7b", "train_4k"),
+         ("mistral-large-123b", "train_4k"),
+         ("zamba2-7b", "train_4k")]
+
+VARIANTS = [
+    ("baseline", dict()),
+    ("seq_parallel", dict(seq_parallel=True)),
+    ("micro32k", dict(micro_tokens=32768)),
+    ("sp+micro32k", dict(seq_parallel=True, micro_tokens=32768)),
+]
+
+
+def measure(arch, shape, mesh, name, opts):
+    res, _, compiled = lower_cell(arch, shape, mesh, **opts)
+    row = rl.roofline_row(arch, shape,
+                          micro_tokens=opts.get("micro_tokens", 8192),
+                          seq_parallel=opts.get("seq_parallel", False))
+    out = {
+        "arch": arch, "shape": shape, "variant": name,
+        "mesh": res["mesh"], "n_micro": res.get("n_micro"),
+        "hlo_collectives_per_body": res.get("collectives", {}),
+        "temp_bytes": res.get("temp_size_in_bytes"),
+        "compile_s": res.get("compile_s"),
+        "analytic": {k: row[k] for k in
+                     ("compute_s", "memory_s", "collective_s", "dominant",
+                      "roofline_frac")},
+    }
+    print(f"[{arch} | {name}] n_micro={out['n_micro']} "
+          f"coll_body={sum(out['hlo_collectives_per_body'].values()):.3e}B "
+          f"analytic coll={row['collective_s']:.2f}s "
+          f"comp={row['compute_s']:.2f}s frac={row['roofline_frac']:.3f}",
+          flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="hillclimb_results.json")
+    ap.add_argument("--cell", default=None, help="arch:shape to run only one")
+    ap.add_argument("--hsdp-multipod", action="store_true",
+                    help="also run the mistral HSDP multi-pod variant")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    cells = CELLS
+    if args.cell:
+        a, s = args.cell.split(":")
+        cells = [(a, s)]
+    rows = []
+    for arch, shape in cells:
+        for name, opts in VARIANTS:
+            try:
+                rows.append(measure(arch, shape, mesh, name, opts))
+            except Exception as e:  # noqa: BLE001
+                print(f"[{arch} | {name}] FAIL {type(e).__name__}: {str(e)[:300]}")
+                rows.append({"arch": arch, "variant": name, "error": str(e)[:1000]})
+
+    if args.hsdp_multipod:
+        mmesh = make_production_mesh(multi_pod=True)
+        for name, opts in (("mp_baseline", dict()),
+                           ("mp_hsdp", dict(hsdp=True)),
+                           ("mp_hsdp+sp+32k", dict(hsdp=True, seq_parallel=True,
+                                                   micro_tokens=32768))):
+            try:
+                rows.append(measure("mistral-large-123b", "train_4k", mmesh,
+                                    name, opts))
+            except Exception as e:  # noqa: BLE001
+                print(f"[mp {name}] FAIL {type(e).__name__}: {str(e)[:300]}")
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,338 @@
+"""Roofline analysis per (arch x shape) on the single-pod production mesh.
+
+Three terms (seconds per global step), TPU v5e constants:
+
+  compute    = FLOPs_per_device  / 197e12   (bf16 MXU)
+  memory     = HBM_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9 (per ICI link)
+
+FLOPs/bytes are ANALYTIC (formulas below, per component) because XLA's
+cost_analysis counts scan bodies once (verified: danube train_4k reports
+1.13e12 vs 4.2e13 actual per-device — exactly the layers x microbatch trip
+count).  benchmarks/calibrate.py cross-checks the analytic numbers against
+compiled artifacts with unrolled scans on spot cells; collective bytes take
+the HLO-parsed per-body numbers scaled by known trip counts.
+
+Cost multipliers over forward FLOPs:
+  standard train 3x (fwd + bwd 2x)   | remat train 4x
+  RevFFN train   5x (fwd 1, inverse ~1, re-linearise 1, bwd 2)
+  prefill/decode 1x
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from typing import Optional
+
+from repro.configs.base import ARCHS, SHAPES, get_config, shapes_for
+from repro.models import moe as moe_lib
+from repro.models.model import Model
+from repro.models import spec as spec_lib
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+CHIPS = 256                  # single pod 16x16
+FSDP, TP = 16, 16
+
+
+# ----------------------------------------------------------- analytic FLOPs
+
+def _attn_flops(cfg, T, S_ctx, cross_len: Optional[int] = None,
+                d_in: Optional[int] = None):
+    """One layer's attention fwd FLOPs for T query tokens attending to S_ctx
+    (causal halves the score work unless cross).  ``d_in`` overrides the
+    projection contraction dim (d/2 with folded adapters)."""
+    d, qd, kd = d_in or cfg.d_model, cfg.q_dim, cfg.kv_dim
+    proj = 2 * T * d * (qd + 2 * kd) + 2 * T * qd * d
+    if cross_len is not None:
+        scores = 2 * 2 * T * cross_len * qd
+    else:
+        scores = 2 * 2 * T * S_ctx * qd / 2          # causal
+    return proj + scores
+
+
+def _adapter_flops(cfg, T, n_inputs=2):
+    d = cfg.d_model
+    return (n_inputs + 1) * 2 * T * (d // 2) * d      # n_inputs x P_up + P_down
+
+
+def _mlp_flops(cfg, T, ff=None, d_in=None):
+    return 3 * 2 * T * (d_in or cfg.d_model) * (ff or cfg.d_ff)
+
+
+def _moe_flops(cfg, T, d_in=None):
+    d, E = d_in or cfg.d_model, moe_lib.padded_experts(cfg.num_experts)
+    k, cf = cfg.top_k, cfg.capacity_factor
+    router = 2 * T * d * E
+    experts = 3 * 2 * (T * k * cf) * d * cfg.d_ff_expert
+    dispatch = 2 * 2 * T * min(512, T) * k * cf * d / 512 * 512 / min(512, T)
+    dispatch = 2 * 2 * T * k * cf * d * min(512, T) / min(512, T)  # ~linear
+    dispatch = 4 * T * k * cf * d                     # dispatch+combine einsums
+    shared = _mlp_flops(cfg, T, cfg.num_shared_experts * cfg.d_ff_expert,
+                        d_in=d) if cfg.num_shared_experts else 0
+    return router + experts + dispatch + shared
+
+
+def _rwkv_flops(cfg, T):
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_size or 64
+    time_mix = 5 * 2 * T * d * d + 2 * 2 * T * d * 64 + 6 * T * d * hd
+    chan_mix = 2 * 2 * T * d * ff + 2 * T * d * d
+    return time_mix + chan_mix
+
+
+def _mamba_flops(cfg, T):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    L = 128
+    return (2 * T * d * 2 * di + 2 * T * di * d + 2 * T * d * 2 * N
+            + 4 * T * L * di + 4 * T * N * di)
+
+
+def fwd_flops(cfg, shape, fold: bool = False) -> float:
+    """Whole-model forward FLOPs for one global batch.  ``fold`` = adapter
+    folding (EXPERIMENTS.md §Perf iter 6): adapters vanish and the pretrained
+    matmuls contract from d/2; per-layer fusion matmuls are O(d^2 * weights)
+    per microbatch — negligible, counted below."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        T, S_ctx = B, S
+    else:
+        T, S_ctx = B * S, S
+    L = cfg.num_layers
+    f = 0.0
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.sliding_window:
+            S_eff = min(S_ctx, cfg.sliding_window)
+        elif cfg.local_global:
+            S_eff = (min(S_ctx, cfg.local_window) + S_ctx) / 2
+        else:
+            S_eff = S_ctx
+        d_in = cfg.stream_dim if fold else cfg.d_model
+        if fold:
+            per = _attn_flops(cfg, T, S_eff, d_in=d_in)
+            per += _moe_flops(cfg, T, d_in=d_in) if cfg.family == "moe" \
+                else _mlp_flops(cfg, T, d_in=d_in)
+            if shape.kind == "train":
+                # per-microbatch weight-fusion matmuls (T-independent);
+                # serving folds once at weight-load time — no per-step cost
+                d = cfg.d_model
+                per += 2 * (d // 2) * d * (cfg.q_dim + 2 * cfg.kv_dim + cfg.q_dim)
+                per += 2 * (d // 2) * d * 3 * cfg.d_ff
+        else:
+            per = _attn_flops(cfg, T, S_eff) + _adapter_flops(cfg, T)
+            per += _adapter_flops(cfg, T, 1)
+            per += _moe_flops(cfg, T) if cfg.family == "moe" else _mlp_flops(cfg, T)
+        f += L * per
+        if cfg.family == "vlm":
+            n_cross = L // cfg.cross_attn_period
+            f += n_cross * (_attn_flops(cfg, T, S_ctx, cross_len=cfg.num_image_tokens)
+                            + _adapter_flops(cfg, T, 1))
+    elif cfg.family == "ssm":
+        f += L * (_rwkv_flops(cfg, T) + 2 * _adapter_flops(cfg, T, 1))
+    elif cfg.family == "hybrid":
+        f += L * (_mamba_flops(cfg, T) + _adapter_flops(cfg, T, 1))
+        n_attn = L // cfg.attn_period
+        f += n_attn * (_attn_flops(cfg, T, S_ctx) + _adapter_flops(cfg, T)
+                       + _mlp_flops(cfg, T) + _adapter_flops(cfg, T, 1))
+    elif cfg.family == "encdec":
+        Te = (B * cfg.encoder_seq_len) if shape.kind != "decode" else 0
+        if Te:
+            f += cfg.num_encoder_layers * (
+                2 * _attn_flops(cfg, Te, cfg.encoder_seq_len)
+                / 2  # non-causal: undo the causal halving, then x1
+                + _adapter_flops(cfg, Te) + _mlp_flops(cfg, Te)
+                + _adapter_flops(cfg, Te, 1))
+        per = (_attn_flops(cfg, T, S_ctx) + _adapter_flops(cfg, T)
+               + _attn_flops(cfg, T, 0, cross_len=cfg.encoder_seq_len)
+               + _adapter_flops(cfg, T, 1)
+               + _mlp_flops(cfg, T) + _adapter_flops(cfg, T, 1))
+        f += cfg.num_layers * per
+    # lm head
+    f += 2 * T * cfg.d_model * cfg.vocab_size
+    return f
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); N excludes the embedding table
+    (a gather, not a matmul) but includes the LM head."""
+    model = Model(cfg)
+    n = model.num_params() - cfg.vocab_size * cfg.d_model
+    if cfg.num_experts:
+        # subtract non-active expert weights
+        E = moe_lib.padded_experts(cfg.num_experts)
+        per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+        n -= cfg.num_layers * (E - cfg.top_k) * per_expert
+    D = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * D
+
+
+def train_mult(cfg, half_mode: bool = False) -> float:
+    """Total/forward FLOP multiplier.  Standard AD: fwd + bwd(2x) = 3; remat
+    adds a fwd = 4.  RevFFN full mode: fwd 1 + re-linearise 1 + bwd 2 +
+    inversion (G once + F x fp_iters ~ 0.5 + 0.5*fp_iters) — calibrated
+    against unrolled compiled lowerings (benchmarks/calibrate.py: analytic /
+    compiled = 0.85 at fp_iters=3 with this formula).  Half mode: inversion
+    is G-only (0.33 of a fwd for MLP-dominant blocks)."""
+    if not cfg.reversible:
+        return 3.0 if cfg.remat_policy == "none" else 4.0
+    if half_mode:
+        return 4.33
+    return 4.0 + 0.5 + 0.5 * max(cfg.inverse_fp_iters, 1)
+
+
+# ----------------------------------------------------------- analytic bytes
+
+def param_bytes(cfg) -> float:
+    return Model(cfg).num_params() * 2.0             # bf16
+
+
+def hbm_bytes(cfg, shape, micro_tokens: int = 8192) -> float:
+    """Per-device HBM traffic per global step."""
+    B, S = shape.global_batch, shape.seq_len
+    pb = param_bytes(cfg)
+    n_micro = max(1, int(B * S / FSDP // micro_tokens)) \
+        if shape.kind == "train" else 1
+    if shape.kind == "train":
+        # params re-read per microbatch (fwd+inv+relin+bwd ~ 4 passes),
+        # optimizer f32 m/v read+write + f32 grads + param update
+        traffic = pb / (FSDP * TP) * 4 * n_micro + pb * 2 / (FSDP * TP)
+        opt = Model(cfg).num_params() * (4 * 3 + 4 * 2) / (FSDP * TP)
+        act = B * S * cfg.d_model * 2 * cfg.num_layers * 10 / FSDP
+        return traffic + opt + act
+    if shape.kind == "prefill":
+        act = B * S * cfg.d_model * 2 * cfg.num_layers * 8 / FSDP
+        return pb / (FSDP * TP) + act
+    # decode: params once + KV/state cache read per token
+    cache = kv_cache_bytes(cfg, shape)
+    return pb / (FSDP * TP) + cache / CHIPS + B * cfg.d_model * 2 * cfg.num_layers
+
+
+def kv_cache_bytes(cfg, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        hd = cfg.rwkv_head_size or 64
+        return cfg.num_layers * B * (cfg.d_model * hd * 4 + 2 * cfg.d_model * 2)
+    n_attn = cfg.num_layers
+    S_kv = S
+    if cfg.sliding_window:
+        S_kv = min(S, cfg.sliding_window)
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.attn_period
+        di = cfg.ssm_expand * cfg.d_model
+        ssm = cfg.num_layers * B * (di // 64 * cfg.ssm_state * 64 * 4)
+        return ssm + n_attn * B * S_kv * cfg.kv_dim * 2 * 2
+    return n_attn * B * S_kv * cfg.kv_dim * 2 * 2
+
+
+# ------------------------------------------------------- analytic collectives
+
+def collective_bytes_dev(cfg, shape, *, micro_tokens: int = 8192,
+                         seq_parallel: bool = False) -> float:
+    """Per-device collective traffic per global step (single pod).
+
+    Components (train):
+      ag  — FSDP param all-gather, once per pass (fwd / inverse+relin / bwd)
+            per microbatch; each device receives ~P*2B/TP.
+      rs  — gradient reduce-scatter per microbatch, bf16 (grads follow param
+            dtype; the f32 accumulator is device-local).
+      ar  — TP activation all-reduce, ~4 per layer per pass of (T_dev x d x
+            2B); all-reduce moves 2x the payload.  Sequence parallelism
+            replaces it with reduce-scatter + all-gather = 1x payload (/2).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    pb = param_bytes(cfg)
+    sp = 0.5 if seq_parallel else 1.0
+    if getattr(cfg, "fold_adapters", False):
+        sp *= 0.63   # HLO-measured fold factor (fold_results.json): fewer TP
+                     # matmuls per block => fewer activation RS/AG pairs
+    if shape.kind == "train":
+        n_micro = max(1, int(B * S / FSDP // micro_tokens))
+        ag = 3 * n_micro * pb / TP
+        rs = n_micro * pb / TP
+        t_dev = B * S / FSDP
+        ar = sp * 3 * n_micro * cfg.num_layers * 4 * 2 \
+            * (t_dev / n_micro) * cfg.d_model * 2
+        return ag + rs + ar
+    t_dev = B * (S if shape.kind == "prefill" else 1) / FSDP
+    ag = pb / TP
+    ar = sp * cfg.num_layers * 4 * 2 * max(t_dev, 1) * cfg.d_model * 2
+    return ag + ar
+
+
+# ----------------------------------------------------------------- the table
+
+def roofline_row(arch: str, shape_name: str, overrides: Optional[dict] = None,
+                 *, micro_tokens: int = 8192, seq_parallel: bool = False,
+                 mult_override: Optional[float] = None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    f_fwd = fwd_flops(cfg, shape, fold=getattr(cfg, "fold_adapters", False))
+    mult = mult_override if mult_override is not None else (
+        train_mult(cfg) if shape.kind == "train" else 1.0)
+    flops_dev = f_fwd * mult / CHIPS
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = hbm_bytes(cfg, shape, micro_tokens) / HBM_BW
+    t_coll = collective_bytes_dev(cfg, shape, micro_tokens=micro_tokens,
+                                  seq_parallel=seq_parallel) / LINK_BW
+    mf = model_flops(cfg, shape)
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    t_bound = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": arch, "shape": shape_name,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom[1],
+        "model_flops": mf,
+        "analytic_flops_global": f_fwd * mult,
+        "useful_ratio": mf / (f_fwd * mult),
+        # achieved fraction of the compute roofline, assuming perfect overlap:
+        # the step can't be faster than its slowest term.
+        "roofline_frac": t_comp / t_bound if t_bound else 0.0,
+        # MFU at the bound: useful MODEL_FLOPS throughput / peak, when the
+        # step runs at its slowest term.  This is the score-relevant number —
+        # reducing waste (e.g. adapter folding) raises it only insofar as it
+        # lowers the binding term.
+        "mfu_bound": (mf / CHIPS / PEAK_FLOPS) / t_bound if t_bound else 0.0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv if argv is not None else None)
+    rows = []
+    for label, kw in (
+        ("BASELINE (paper-faithful)", dict()),
+        ("OPTIMIZED (seq-parallel + 32k microbatch + adapter folding; "
+         "rwkv/encdec/vlm keep unfolded adapters)",
+         dict(micro_tokens=32768, seq_parallel=True, fold=True)),
+    ):
+        print(f"\n--- {label} ---")
+        print(f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+              f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} {'mfu':>6s}")
+        fold = kw.pop("fold", False)
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            ov = {"fold_adapters": True} if (
+                fold and cfg.family in ("dense", "moe", "hybrid")) else None
+            for sh in shapes_for(arch):
+                r = roofline_row(arch, sh.name, overrides=ov, **kw)
+                r["variant"] = label.split()[0].lower()
+                rows.append(r)
+                print(f"{arch:26s} {sh.name:12s} {r['compute_s']:10.4f} "
+                      f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+                      f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+                      f"{r['mfu_bound']:6.3f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

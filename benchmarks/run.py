@@ -1,0 +1,45 @@
+"""Benchmark harness entry: one function per paper table + the roofline.
+Prints ``name,us_per_call,derived`` style CSV sections.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n=== {title} ===", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import roofline, table1_memory, table2_quality, table3_ablation
+
+    _section("Table 1: memory & throughput (reduced qwen2-moe, CPU)")
+    t0 = time.time()
+    table1_memory.main()
+    print(f"# table1 wall: {time.time() - t0:.1f}s")
+
+    if not args.skip_slow:
+        _section("Table 2: downstream quality proxy (eval loss)")
+        t0 = time.time()
+        table2_quality.main()
+        print(f"# table2 wall: {time.time() - t0:.1f}s")
+
+        _section("Table 3: two-stage ablation")
+        t0 = time.time()
+        table3_ablation.main()
+        print(f"# table3 wall: {time.time() - t0:.1f}s")
+
+    _section("Roofline (analytic, single-pod 16x16; see EXPERIMENTS.md)")
+    roofline.main(argv=[])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,112 @@
+"""Paper Table 1: peak memory & throughput of RevFFN vs baselines.
+
+Two measurements on the paper's model family (qwen2-moe, reduced so it runs
+on this CPU container; the FULL-config memory story is the dry-run's
+memory_analysis in EXPERIMENTS.md):
+
+  * trace-level peak residual bytes: the size of everything autodiff saves
+    for backward (the quantity RevFFN attacks).  Measured from jax.vjp.
+  * wall-clock step throughput (samples/s) on identical shapes.
+
+Methods: RevFFN (reversible, O(1) residuals), SFT+ckpt (standard blocks,
+remat), LoRA / DoRA / (IA)3 (frozen base; adapter-only grads), LoMo (SGD,
+zero optimizer state), GaLore (low-rank optimizer state).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import adapters as ad
+from repro.models.model import Model
+from repro.models.spec import initialize
+from repro.optim.adamw import AdamW
+from repro.optim.galore import GaLore
+from repro.optim.lomo import LoMo
+from repro.train.trainer import make_train_step
+
+
+def _residual_bytes(loss_fn, params):
+    _, vjp_fn = jax.vjp(loss_fn, params)
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(vjp_fn) if hasattr(x, "size"))
+
+
+def _opt_state_bytes(state):
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(state))
+
+
+def _throughput(step, params, opt_state, batch, iters=3):
+    params, opt_state, _ = step(params, opt_state, batch)   # compile
+    jax.block_until_ready(params)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        params, opt_state, m = step(params, opt_state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / iters
+    return batch["tokens"].shape[0] / dt
+
+
+def run(B=4, S=256):
+    cfg_rev = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layers=4, dtype="float32")
+    cfg_sft = cfg_rev.replace(reversible=False, remat_policy="block")
+    cfg_sft_nockpt = cfg_rev.replace(reversible=False, remat_policy="none")
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S),
+                                          0, cfg_rev.vocab_size)}
+    rows = []
+
+    def full_ft_row(name, cfg, opt):
+        model = Model(cfg)
+        params = model.init(key)
+        res = _residual_bytes(lambda p: model.loss(p, batch), params)
+        ost = opt.init(params)
+        step = jax.jit(make_train_step(model, opt))
+        tput = _throughput(step, params, ost, batch)
+        rows.append((name, res / 2**20, _opt_state_bytes(ost) / 2**20, tput))
+
+    full_ft_row("SFT", cfg_sft_nockpt, AdamW(lr=1e-4))
+    full_ft_row("SFT+ckpt", cfg_sft, AdamW(lr=1e-4))
+    full_ft_row("LoMo", cfg_sft, LoMo(lr=1e-4))
+    full_ft_row("GaLore", cfg_sft, GaLore(lr=1e-4, rank=8))
+    full_ft_row("RevFFN", cfg_rev, AdamW(lr=1e-4))
+
+    # PEFT rows: gradients only w.r.t. adapter params (frozen base)
+    model = Model(cfg_sft_nockpt)
+    base = model.init(key)
+    specs = model.param_specs()
+    for name, make in (
+        ("LoRA", lambda: (initialize(ad.lora_specs(specs, 8), key, "float32"),
+                          lambda lp: model.loss(ad.merge_lora(base, lp), batch))),
+        ("IA3", lambda: (initialize(ad.ia3_specs(specs), key, "float32"),
+                         lambda ip: model.loss(ad.merge_ia3(base, ip), batch))),
+    ):
+        peft, loss_fn = make()
+        res = _residual_bytes(loss_fn, peft)
+        opt = AdamW(lr=1e-4)
+        ost = opt.init(peft)
+
+        @jax.jit
+        def peft_step(p, o, b, loss_fn=loss_fn, opt=opt):
+            l, g = jax.value_and_grad(loss_fn)(p)
+            p, o = opt.update(g, o, p)
+            return p, o, {"loss": l, "step": o["step"]}
+        tput = _throughput(peft_step, peft, ost, batch)
+        rows.append((name, res / 2**20, _opt_state_bytes(ost) / 2**20, tput))
+
+    return rows
+
+
+def main():
+    print("method,residual_MiB,opt_state_MiB,samples_per_s")
+    for name, res, ost, tput in run():
+        print(f"{name},{res:.1f},{ost:.1f},{tput:.2f}")
+
+
+if __name__ == "__main__":
+    main()

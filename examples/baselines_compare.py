@@ -1,0 +1,21 @@
+"""Compare fine-tuning methods (paper Tables 1+2 in one script): RevFFN vs
+SFT+ckpt vs LoRA vs LoMo vs GaLore on identical data/budget.
+
+    PYTHONPATH=src python examples/baselines_compare.py
+"""
+from benchmarks.table1_memory import run as run_mem
+from benchmarks.table2_quality import run as run_quality
+
+
+def main():
+    print("== memory / speed ==")
+    print(f"{'method':10s} {'residual_MiB':>13s} {'opt_MiB':>9s} {'samples/s':>10s}")
+    for name, res, ost, tput in run_mem():
+        print(f"{name:10s} {res:13.1f} {ost:9.1f} {tput:10.2f}")
+    print("\n== quality (held-out eval loss, lower=better) ==")
+    for name, loss in run_quality():
+        print(f"{name:10s} {loss:8.4f}")
+
+
+if __name__ == "__main__":
+    main()

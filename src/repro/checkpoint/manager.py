@@ -1,0 +1,115 @@
+"""Sharded, preemption-safe checkpointing.
+
+Layout:  <dir>/step_<N>/proc<k>.npz  +  <dir>/step_<N>/META.json
+Writes go to ``step_<N>.tmp`` then os.replace -> atomic publish; a partial
+write is never visible as a valid checkpoint.  ``latest_step`` scans published
+directories, so restart-after-kill resumes from the last complete save.
+On multi-host each process writes only its addressable shards (here: 1 host).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves: device->host transfer happens synchronously (cheap)
+    then serialisation runs on a background thread so the train loop never
+    stalls on disk I/O.  ``wait()`` joins the in-flight save; a new save
+    joins the previous one first (at most one in flight — bounded memory)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        import threading
+        self._threading = threading
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread = None
+
+    def save(self, step: int, tree: Any, **kw):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+        self._thread = self._threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree),
+            kwargs=dict(keep=self.keep, **kw), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
+         process_index: int = 0, extra_meta: Optional[dict] = None):
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten(tree)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(flat):
+        arr = np.asarray(x)
+        dtypes.append(str(arr.dtype))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = arr.view(np.uint16)       # npz can't store ml_dtypes
+        arrays[f"a{i}"] = arr
+    np.savez(os.path.join(tmp, f"proc{process_index}.npz"), **arrays)
+    meta = {"step": step, "n_leaves": len(flat), "dtypes": dtypes}
+    if extra_meta:
+        meta.update(extra_meta)
+    with open(os.path.join(tmp, "META.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    _gc(ckpt_dir, keep)
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "META.json")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            process_index: int = 0) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays/SDS)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, f"proc{process_index}.npz"))
+    with open(os.path.join(d, "META.json")) as f:
+        meta = json.load(f)
+    dtypes = meta.get("dtypes")
+    flat, treedef = _flatten(like)
+    leaves = []
+    for i, x in enumerate(flat):
+        arr = data[f"a{i}"]
+        if dtypes and dtypes[i] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves.append(jax.numpy.asarray(arr).astype(x.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

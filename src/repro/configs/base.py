@@ -1,0 +1,186 @@
+"""Config system: ModelConfig dataclass, input-shape registry, arch registry.
+
+Every assigned architecture gets a module ``repro/configs/<id>.py`` exporting
+``CONFIG``.  ``get_config(name)`` resolves it; ``get_config(name, reduced=True)``
+returns a smoke-test-sized config of the same family (same structural flags,
+tiny dims) for CPU tests.  The FULL configs are only ever lowered via
+ShapeDtypeStructs in the dry-run — never allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+Family = str  # "dense" | "moe" | "ssm" | "hybrid" | "encdec" | "vlm"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention variants
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None          # SWA width (h2o-danube)
+    local_global: bool = False                    # gemma2 alternating local/global
+    local_window: int = 4096                      # window of local layers when local_global
+    logit_softcap: Optional[float] = None         # gemma2 attn softcap
+    final_softcap: Optional[float] = None         # gemma2 final-logit softcap
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    d_ff_expert: int = 0
+    moe_period: int = 1            # a layer is MoE iff (layer % moe_period == moe_period-1)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # SSM / hybrid
+    ssm_state: int = 0             # mamba2 state size
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    attn_period: int = 0           # zamba2: shared attention block applied every N layers
+    rwkv_head_size: int = 0        # rwkv6
+
+    # enc-dec
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 1500    # whisper frame positions (stub frontend)
+
+    # VLM
+    cross_attn_period: int = 0     # llama-3.2-vision: image cross-attn every N layers
+    num_image_tokens: int = 1601   # stub patch embedding count
+
+    # RevFFN
+    reversible: bool = True
+    coupling: str = "cross"        # "cross" (paper) | "standard" (RevNet)
+    inverse_fp_iters: int = 3      # paper uses 1; 3 reaches fp32 eps (see DESIGN.md)
+    adapter_dim: Optional[int] = None  # d for P_up/P_down; None -> d_model
+
+    # training
+    dtype: str = "bfloat16"
+    remat_policy: str = "none"     # for the SFT+checkpointing baseline
+    attn_q_chunk: int = 1024       # q-block chunking (memory); 0 disables
+    loss_chunk: int = 512          # seq-chunked CE loss (memory); 0 disables
+    use_flash_kernel: bool = False  # Pallas flash attention on the train path
+                                    # (TPU; interpret-mode on CPU — tests only)
+    fold_adapters: bool = False     # beyond-paper: fold P_up/P_down into the
+                                    # adjacent pretrained matmuls at apply time
+                                    # (exact; see EXPERIMENTS.md §Perf iter 6)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def stream_dim(self) -> int:
+        """Per-stream width of the reversible split (d_model / 2)."""
+        assert self.d_model % 2 == 0
+        return self.d_model // 2
+
+    def is_moe_layer(self, layer: int) -> bool:
+        return self.num_experts > 0 and (layer % self.moe_period == self.moe_period - 1)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic attention history — see DESIGN.md §4)
+LONG_CONTEXT_ARCHS = {"rwkv6-3b", "zamba2-7b", "h2o-danube-1.8b"}
+
+ARCHS = [
+    "h2o-danube-1.8b",
+    "mistral-large-123b",
+    "gemma2-27b",
+    "qwen1.5-110b",
+    "qwen2-moe-a2.7b",
+    "llama4-scout-17b-a16e",
+    "whisper-medium",
+    "zamba2-7b",
+    "llama-3.2-vision-11b",
+    "rwkv6-3b",
+]
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def shapes_for(arch: str):
+    """The applicable ShapeConfigs for an arch (skips recorded in DESIGN.md)."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+            continue
+        out.append(s)
+    return out
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[name]}")
+    cfg: ModelConfig = mod.CONFIG
+    if reduced:
+        cfg = reduce_config(cfg)
+    return cfg
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test config: same family/flags, tiny dims. Runs on CPU."""
+    kw = dict(
+        num_layers=min(cfg.num_layers, 4),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        dtype="float32",
+        inverse_fp_iters=5,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=min(cfg.num_experts, 8),
+                  top_k=min(cfg.top_k, 2),
+                  num_shared_experts=min(cfg.num_shared_experts, 1),
+                  d_ff_expert=64)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16)
+    if cfg.attn_period:
+        kw.update(attn_period=2)
+    if cfg.rwkv_head_size:
+        kw.update(rwkv_head_size=32, num_heads=4)
+    if cfg.num_encoder_layers:
+        kw.update(num_encoder_layers=2, encoder_seq_len=16)
+    if cfg.cross_attn_period:
+        kw.update(cross_attn_period=2, num_image_tokens=8)
+    if cfg.sliding_window:
+        kw.update(sliding_window=64)
+    if cfg.local_global:
+        kw.update(local_window=32)
+    return cfg.replace(**kw)

@@ -1,0 +1,22 @@
+"""gemma2-27b — local+global alternating attention, logit softcapping.
+
+[arXiv:2408.00118; hf]  46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,           # explicit head_dim (32*128 != d_model, as in the real model)
+    d_ff=36864,
+    vocab_size=256000,
+    local_global=True,
+    local_window=4096,
+    logit_softcap=50.0,
+    final_softcap=30.0,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,22 @@
+"""llama-3.2-vision-11b — text backbone with image cross-attention layers.
+Vision tower is a STUB (``input_specs`` provides precomputed patch embeddings).
+
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    cross_attn_period=5,    # image cross-attn every 5th layer (8 total)
+    num_image_tokens=1601,
+    rope_theta=500_000.0,
+)

@@ -1,0 +1,21 @@
+"""whisper-medium — encoder-decoder audio backbone; conv frontend is a STUB
+(``input_specs`` provides precomputed frame embeddings).
+
+[arXiv:2212.04356; unverified]  24L d_model=1024 16H d_ff=4096 vocab=51865.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    num_layers=24,             # decoder layers
+    num_encoder_layers=24,
+    encoder_seq_len=1500,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    rope_theta=10_000.0,       # backbone uses rope in our adaptation (orig: learned abs pos)
+)

@@ -1,0 +1,24 @@
+"""zamba2-7b — Mamba2 backbone + shared attention block applied periodically.
+
+[arXiv:2411.15242; unverified]  81L d_model=3584 32H (kv=32) d_ff=14336
+vocab=32000 ssm_state=64.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    attn_period=6,          # shared attention block every 6 mamba layers
+    coupling="standard",    # mamba token mixer takes a single stream (DESIGN.md §4)
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,153 @@
+"""Projection adapters (paper §3.2) and PEFT baselines (LoRA / DoRA / (IA)3).
+
+The paper's adapters: P_up (d/2 -> d) before a pre-trained block, P_down
+(d -> d/2) after it, so all heavy compute stays in the original d-dim space.
+
+PEFT baselines are implemented as *weight-space merges*: ``merge_peft`` maps
+(base params, peft params) -> effective params, letting every baseline reuse
+the exact same model forward.  (Memory accounting for Table 1 treats them
+analytically — see benchmarks/table1_memory.py.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+
+# ---------------------------------------------------------------- RevFFN adapters
+
+def adapter_specs(d_model: int) -> dict:
+    half = d_model // 2
+    return {
+        "p_up": ParamSpec((half, d_model), ("stream", "embed")),
+        # small init => reversible block starts near identity (stable warm-up)
+        "p_down": ParamSpec((d_model, half), ("embed", "stream"), init="small"),
+    }
+
+
+def up(p, x):
+    return jnp.einsum("bsh,hd->bsd", x, p["p_up"])
+
+
+def down(p, x):
+    return jnp.einsum("bsd,dh->bsh", x, p["p_down"])
+
+
+# ---------------------------------------------------------------- PEFT baselines
+
+LORA_TARGETS = ("wq", "wv", "w_gate", "w_down", "p_up", "p_down")
+
+
+def _is_target(path, targets) -> bool:
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    return any(k in targets for k in keys)
+
+
+def lora_specs(base_specs, rank: int = 16, targets=LORA_TARGETS):
+    """For each targeted 2D (or stacked 3D) weight, add (a, b) low-rank specs."""
+    out = {}
+
+    def visit(path, spec):
+        if not isinstance(spec, ParamSpec) or not _is_target(path, targets):
+            return
+        shape = spec.shape
+        if len(shape) == 2:
+            a = ParamSpec((shape[0], rank), (spec.axes[0], None))
+            b = ParamSpec((rank, shape[1]), (None, spec.axes[1]), init="zeros")
+        elif len(shape) == 3 and spec.axes[0] == "layers":
+            a = ParamSpec((shape[0], shape[1], rank), (spec.axes[0], spec.axes[1], None))
+            b = ParamSpec((shape[0], rank, shape[2]), (spec.axes[0], None, spec.axes[2]),
+                          init="zeros")
+        else:
+            return
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        out[name] = {"a": a, "b": b}
+
+    jax.tree_util.tree_map_with_path(visit, base_specs,
+                                     is_leaf=lambda s: isinstance(s, ParamSpec))
+    return out
+
+
+def merge_lora(base, lora, scale: float = 2.0):
+    """effective = base + scale * a @ b for every adapted leaf."""
+    flat = dict(lora)
+
+    def visit(path, w):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if name in flat:
+            a, b = flat[name]["a"], flat[name]["b"]
+            delta = jnp.einsum("...ir,...rj->...ij", a, b) * scale
+            return (w.astype(jnp.float32) + delta.astype(jnp.float32)).astype(w.dtype)
+        return w
+
+    return jax.tree_util.tree_map_with_path(visit, base)
+
+
+def merge_dora(base, dora, scale: float = 2.0):
+    """DoRA: magnitude/direction decomposition. dora = {lora leaves, 'mag' leaves}."""
+    merged = merge_lora(base, dora["lora"], scale)
+    mags = dora["mag"]
+
+    def visit(path, w):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if name in mags:
+            wf = w.astype(jnp.float32)
+            norm = jnp.linalg.norm(wf, axis=-2, keepdims=True) + 1e-6
+            return (mags[name].astype(jnp.float32) * wf / norm).astype(w.dtype)
+        return w
+
+    return jax.tree_util.tree_map_with_path(visit, merged)
+
+
+def dora_mag_specs(base_specs, targets=LORA_TARGETS):
+    out = {}
+
+    def visit(path, spec):
+        if not isinstance(spec, ParamSpec) or not _is_target(path, targets):
+            return
+        if len(spec.shape) == 2:
+            out["/".join(str(getattr(k, "key", k)) for k in path)] = ParamSpec(
+                (1, spec.shape[1]), (None, spec.axes[1]), init="ones")
+        elif len(spec.shape) == 3 and spec.axes[0] == "layers":
+            out["/".join(str(getattr(k, "key", k)) for k in path)] = ParamSpec(
+                (spec.shape[0], 1, spec.shape[2]), ("layers", None, spec.axes[2]),
+                init="ones")
+
+    jax.tree_util.tree_map_with_path(visit, base_specs,
+                                     is_leaf=lambda s: isinstance(s, ParamSpec))
+    return out
+
+
+IA3_TARGETS = ("wk", "wv", "w_up")
+
+
+def ia3_specs(base_specs):
+    """(IA)3: learned per-channel rescaling of k / v / ffn-up projections."""
+    out = {}
+
+    def visit(path, spec):
+        if not isinstance(spec, ParamSpec) or not _is_target(path, IA3_TARGETS):
+            return
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if len(spec.shape) == 2:
+            out[name] = ParamSpec((spec.shape[1],), (spec.axes[1],), init="ones")
+        elif len(spec.shape) == 3 and spec.axes[0] == "layers":
+            out[name] = ParamSpec((spec.shape[0], spec.shape[2]),
+                                  ("layers", spec.axes[2]), init="ones")
+
+    jax.tree_util.tree_map_with_path(visit, base_specs,
+                                     is_leaf=lambda s: isinstance(s, ParamSpec))
+    return out
+
+
+def merge_ia3(base, ia3):
+    def visit(path, w):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if name in ia3:
+            s = ia3[name]
+            return (w.astype(jnp.float32) * s[..., None, :].astype(jnp.float32)
+                    ).astype(w.dtype) if w.ndim > s.ndim else w * s
+        return w
+
+    return jax.tree_util.tree_map_with_path(visit, base)

@@ -1,0 +1,247 @@
+"""RevFFN reversible blocks and the O(1)-activation-memory stack.
+
+The paper's coupled update (Eqs. 1-2):
+
+    Y1 = X1 + F(X1, X2)        F = cross-branch attention (Q from X1, K/V from X2)
+    Y2 = X2 + G(Y1)            G = MLP or MoE
+
+with inverse
+
+    X2 = Y2 - G(Y1)
+    X1 = Y1 - F(X1, X2)        (fixed point in X1; paper runs 1 iteration seeded at Y1)
+
+``coupling="standard"`` is the RevNet form where F depends only on X2, making
+the inverse exact in one step — used for attention-free token mixers
+(RWKV6 / Mamba2, see DESIGN.md §4).
+
+``reversible_stack`` wraps a scan over blocks in a ``jax.custom_vjp`` whose
+residuals are ONLY (params, final outputs): the backward pass reconstructs each
+block's input by inversion and re-runs one block at a time under ``jax.vjp``.
+Peak activation memory is therefore O(one block), independent of depth — this
+is the paper's memory claim, realised JAX-natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def coupling(F: Callable, target: int, fp_iters: int = 1):
+    """One reversible additive update of a single stream.
+
+    F(params, shared, ctx, i, x1, x2) -> delta added to stream ``target``.
+
+    ``fp_iters == 1`` asserts F does not depend on the target stream (exact
+    inverse, RevNet "standard" coupling).  ``fp_iters > 1`` allows the paper's
+    cross form where F reads the stream it updates (Q from X1 while updating
+    X1): the inverse runs that many fixed-point iterations seeded at Y.
+    """
+    assert target in (1, 2)
+
+    def fwd(p, sh, ctx, i, x1, x2):
+        if target == 1:
+            return x1 + F(p, sh, ctx, i, x1, x2), x2
+        return x1, x2 + F(p, sh, ctx, i, x1, x2)
+
+    def inv(p, sh, ctx, i, y1, y2):
+        if target == 1:
+            x1 = y1                                  # paper: seed at Y1
+            for _ in range(max(fp_iters, 1)):
+                x1 = y1 - F(p, sh, ctx, i, x1, y2)
+            return x1, y2
+        x2 = y2
+        for _ in range(max(fp_iters, 1)):
+            x2 = y2 - F(p, sh, ctx, i, y1, x2)
+        return y1, x2
+
+    return fwd, inv
+
+
+def make_coupled(F: Callable, G: Callable, *, mode: str = "cross",
+                 fp_iters: int = 3):
+    """Paper Eqs. 1-2: Y1 = X1 + F(X1, X2); Y2 = X2 + G(Y1).
+
+    mode="cross": F reads X1 (queries) -> fixed-point inverse (paper).
+    mode="standard": F must ignore X1 -> exact inverse (RevNet form, used for
+    attention-free mixers per DESIGN.md §4).
+    """
+    it = fp_iters if mode == "cross" else 1
+    return chain(coupling(F, 1, it), coupling(G, 2, 1))
+
+
+def chain(*pairs):
+    """Compose bijections: fwd applies in order, inv in reverse order."""
+    def fwd(p, sh, ctx, i, x1, x2):
+        for f, _ in pairs:
+            x1, x2 = f(p, sh, ctx, i, x1, x2)
+        return x1, x2
+
+    def inv(p, sh, ctx, i, y1, y2):
+        for _, g in reversed(pairs):
+            y1, y2 = g(p, sh, ctx, i, y1, y2)
+        return y1, y2
+
+    return fwd, inv
+
+
+def _zeros_tangent(tree):
+    """float0 zero-cotangents for nondiff (integer) pytrees."""
+    def z(x):
+        if jnp.issubdtype(jnp.result_type(x), jnp.inexact):
+            return jnp.zeros_like(x)
+        return np.zeros(jnp.shape(x), jax.dtypes.float0)
+    return jax.tree_util.tree_map(z, tree)
+
+
+def reversible_stack(block_fwd: Callable, block_inv: Callable, n_layers: int,
+                     save_memory=True, half_inv: Callable = None):
+    """Return apply(stacked_params, shared, ctx, x1, x2) -> (y1, y2).
+
+    ``stacked_params``: pytree with leading dim n_layers (scanned).
+    ``shared``: differentiable tree shared across layers (e.g. encoder output,
+    image embeddings, shared attention weights); cotangents accumulate.
+    ``ctx``: non-differentiable tree (positions, indices).
+
+    save_memory:
+      True   — paper mode: O(1) activations, fixed-point inversion of the
+               cross coupling during backward.
+      "half" — beyond-paper semi-reversible mode (EXPERIMENTS.md §Perf):
+               save stream-1 inputs per layer (d/2 activations).  Then layer
+               k's output y1 equals layer k+1's saved x1, so the backward
+               needs only the EXACT closed-form ``half_inv``
+               (x2 = y2 - G(y1)) — no fixed point, no F re-evaluations,
+               and gradients are exact regardless of inverse_fp_iters.
+      False  — plain scan (XLA default AD, full caching): the SFT baseline.
+    """
+    from repro.core import settings
+    idxs = jnp.arange(n_layers, dtype=jnp.int32)
+
+    def plain(stacked, shared, ctx, x1, x2):
+        def body(carry, inp):
+            i, lp = inp
+            return block_fwd(lp, shared, ctx, i, *carry), None
+        (y1, y2), _ = jax.lax.scan(body, (x1, x2), (idxs, stacked),
+                                   unroll=settings.SCAN_UNROLL)
+        return y1, y2
+
+    if save_memory is False:
+        return plain
+
+    if save_memory == "half":
+        assert half_inv is not None, "half mode needs a half_inv callable"
+        return _half_stack(block_fwd, half_inv, n_layers, plain, idxs)
+
+    @jax.custom_vjp
+    def apply(stacked, shared, ctx, x1, x2):
+        return plain(stacked, shared, ctx, x1, x2)
+
+    def fwd_rule(stacked, shared, ctx, x1, x2):
+        y1, y2 = plain(stacked, shared, ctx, x1, x2)
+        # residuals: params + OUTPUT only — no per-layer activations
+        return (y1, y2), (stacked, shared, ctx, y1, y2)
+
+    def bwd_rule(res, cts):
+        stacked, shared, ctx, y1, y2 = res
+        ct1, ct2 = cts
+        zero_sh = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.result_type(x))
+            if jnp.issubdtype(jnp.result_type(x), jnp.inexact) else None, shared)
+
+        def body(carry, inp):
+            i, lp = inp
+            cy1, cy2, c1, c2, csh = carry
+            x1, x2 = block_inv(lp, shared, ctx, i, cy1, cy2)
+            x1 = jax.lax.stop_gradient(x1)
+            x2 = jax.lax.stop_gradient(x2)
+            _, vjp = jax.vjp(
+                lambda lp_, sh_, a, b: block_fwd(lp_, sh_, ctx, i, a, b),
+                lp, shared, x1, x2)
+            dlp, dsh, d1, d2 = vjp((c1, c2))
+            csh = jax.tree_util.tree_map(
+                lambda a, b: a + b if a is not None else None, csh, dsh,
+                is_leaf=lambda x: x is None)
+            return (x1, x2, d1, d2, csh), dlp
+
+        init = (y1, y2, ct1, ct2, zero_sh)
+        from repro.core import settings as _s
+        (_, _, d1, d2, dsh), dstacked = jax.lax.scan(
+            body, init, (idxs, stacked), reverse=True,
+            unroll=_s.SCAN_UNROLL)
+        dsh = jax.tree_util.tree_map(
+            lambda z, s: z if z is not None
+            else np.zeros(jnp.shape(s), jax.dtypes.float0),
+            dsh, shared, is_leaf=lambda x: x is None)
+        return dstacked, dsh, _zeros_tangent(ctx), d1, d2
+
+    apply.defvjp(fwd_rule, bwd_rule)
+    return apply
+
+
+def _half_stack(block_fwd, half_inv, n_layers, plain, idxs):
+    """Semi-reversible stack: residuals = stream-1 inputs per layer only."""
+
+    @jax.custom_vjp
+    def apply(stacked, shared, ctx, x1, x2):
+        return plain(stacked, shared, ctx, x1, x2)
+
+    def fwd_rule(stacked, shared, ctx, x1, x2):
+        from repro.core import settings
+
+        def body(carry, inp):
+            i, lp = inp
+            a, b = carry
+            return block_fwd(lp, shared, ctx, i, a, b), a   # save x1 input
+        (y1, y2), x1_stack = jax.lax.scan(body, (x1, x2), (idxs, stacked),
+                                          unroll=settings.SCAN_UNROLL)
+        return (y1, y2), (stacked, shared, ctx, x1_stack, y1, y2)
+
+    def bwd_rule(res, cts):
+        from repro.core import settings
+        stacked, shared, ctx, x1_stack, y1_fin, y2_fin = res
+        ct1, ct2 = cts
+        # y1 of layer k == x1 input of layer k+1 (saved); last layer: y1_fin
+        y1_stack = jnp.concatenate([x1_stack[1:], y1_fin[None]], axis=0)
+        zero_sh = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.result_type(x))
+            if jnp.issubdtype(jnp.result_type(x), jnp.inexact) else None, shared)
+
+        def body(carry, inp):
+            i, lp, x1_k, y1_k = inp
+            y2_k, c1, c2, csh = carry
+            x2_k = jax.lax.stop_gradient(
+                half_inv(lp, shared, ctx, i, x1_k, y1_k, y2_k))
+            _, vjp = jax.vjp(
+                lambda lp_, sh_, a, b: block_fwd(lp_, sh_, ctx, i, a, b),
+                lp, shared, x1_k, x2_k)
+            dlp, dsh, d1, d2 = vjp((c1, c2))
+            csh = jax.tree_util.tree_map(
+                lambda a, b: a + b if a is not None else None, csh, dsh,
+                is_leaf=lambda x: x is None)
+            return (x2_k, d1, d2, csh), dlp
+
+        init = (y2_fin, ct1, ct2, zero_sh)
+        (_, d1, d2, dsh), dstacked = jax.lax.scan(
+            body, init, (idxs, stacked, x1_stack, y1_stack), reverse=True,
+            unroll=settings.SCAN_UNROLL)
+        dsh = jax.tree_util.tree_map(
+            lambda z, s: z if z is not None
+            else np.zeros(jnp.shape(s), jax.dtypes.float0),
+            dsh, shared, is_leaf=lambda x: x is None)
+        return dstacked, dsh, _zeros_tangent(ctx), d1, d2
+
+    apply.defvjp(fwd_rule, bwd_rule)
+    return apply
+
+
+def split_streams(h):
+    """H (B,S,d) -> X1, X2 (B,S,d/2) along features (paper §3.1)."""
+    d = h.shape[-1]
+    return h[..., : d // 2], h[..., d // 2:]
+
+
+def merge_streams(y1, y2):
+    return jnp.concatenate([y1, y2], axis=-1)

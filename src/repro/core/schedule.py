@@ -1,0 +1,58 @@
+"""Two-stage training schedule (paper §3.3).
+
+Stage 1 (adapter warm-up): freeze all pre-trained weights; train only the
+projection adapters P_up / P_down (and the new reversible-stream norm scales,
+which are likewise not pre-trained).
+
+Stage 2 (joint fine-tuning): unfreeze everything EXCEPT the MoE routers
+("gating networks remain frozen to preserve routing stability").
+
+Masks are pytrees of 0/1 floats matching the param tree; optimizers multiply
+updates by the mask (so frozen leaves keep exactly their initial values and
+carry no optimizer-state motion).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ADAPTER_KEYS = ("p_up", "p_down", "norm1", "norm2", "norm_mlp", "norm_cross")
+ROUTER_KEYS = ("router",)
+
+
+def _path_keys(path):
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def _mask_tree(params, predicate):
+    def visit(path, leaf):
+        keep = predicate(_path_keys(path))
+        return jnp.asarray(1.0 if keep else 0.0, jnp.float32)
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def stage1_mask(params):
+    """Trainable: adapters + new stream norms only."""
+    return _mask_tree(params, lambda ks: any(k in ADAPTER_KEYS for k in ks))
+
+
+def stage2_mask(params):
+    """Trainable: everything except MoE routers."""
+    return _mask_tree(params, lambda ks: not any(k in ROUTER_KEYS for k in ks))
+
+
+def full_mask(params):
+    return _mask_tree(params, lambda ks: True)
+
+
+def stage_mask(params, stage: int):
+    if stage == 1:
+        return stage1_mask(params)
+    if stage == 2:
+        return stage2_mask(params)
+    return full_mask(params)
+
+
+def num_trainable(mask, params) -> int:
+    sizes = jax.tree_util.tree_map(lambda m, p: int(m) * p.size, mask, params)
+    return sum(jax.tree_util.tree_leaves(sizes))

@@ -1,0 +1,24 @@
+"""Global lowering knobs (used by the dry-run calibration only).
+
+SCAN_UNROLL: unroll factor for layer/microbatch scans.  XLA's cost_analysis
+counts while-loop bodies ONCE; calibration lowers small-depth configs with
+fully unrolled scans so compiled FLOP counts are exact, then checks the
+analytic roofline model against them (benchmarks/calibrate.py).
+"""
+SCAN_UNROLL: int = 1
+
+# Sequence-parallel activation sharding (perf iteration 1, EXPERIMENTS.md
+# §Perf): when set to a PartitionSpec, activations inside reversible blocks
+# get with_sharding_constraint'd so GSPMD emits reduce-scatter/all-gather
+# pairs instead of all-reduces around TP matmuls (half the traffic).
+ACT_SPEC = None
+
+
+def set_unroll(n: int):
+    global SCAN_UNROLL
+    SCAN_UNROLL = n
+
+
+def set_act_spec(spec):
+    global ACT_SPEC
+    ACT_SPEC = spec

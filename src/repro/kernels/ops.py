@@ -1,0 +1,142 @@
+"""Jit'd public wrappers around the Pallas kernels: dtype/shape plumbing,
+head-dim padding to MXU-friendly multiples of 128, and interpret-mode
+selection (interpret=True everywhere except a real TPU backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_ssd as _ms
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import rwkv6_scan as _rw
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_last(x, mult: int):
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad == 0:
+        return x, d
+    cfgpad = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, cfgpad), d
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: (B,H,Sq,hd), k/v: (B,KV,Skv,hd).  Pads hd to a multiple of 128
+    (zero-padding is exact: scores and outputs are unchanged; softmax scale
+    keeps the original hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    hd = q.shape[-1]
+    qp, _ = _pad_last(q, 128)
+    kp, _ = _pad_last(k, 128)
+    vp, _ = _pad_last(v, 128)
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              softcap=softcap, scale=hd ** -0.5,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out[..., :hd]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_trainable(q, k, v, causal=True, window=None, softcap=None):
+    """Differentiable wrapper: Pallas kernel forward, oracle-derived backward.
+    (A production TPU deployment pairs this with a backward flash kernel;
+    the reference-vjp backward keeps gradients exact meanwhile.)"""
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap)
+
+
+def _fat_fwd(q, k, v, causal, window, softcap):
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    return out, (q, k, v)
+
+
+def _fat_bwd(causal, window, softcap, res, ct):
+    from repro.kernels import ref
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: ref.flash_attention_ref(
+        a, b, c, causal=causal, window=window, softcap=softcap), q, k, v)
+    return vjp(ct)
+
+
+flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, block_rows: int = 128,
+            interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 64,
+               interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _rw.rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_ssd(x, B_t, C_t, dt, log_a, *, chunk: int = 128,
+              interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _ms.mamba_ssd(x, B_t, C_t, dt, log_a, chunk=chunk,
+                         interpret=interpret)
+
+
+@jax.custom_vjp
+def mamba_ssd_trainable(x, B_t, C_t, dt, log_a):
+    """Differentiable wrapper: Pallas SSD kernel forward, oracle backward."""
+    return mamba_ssd(x, B_t, C_t, dt, log_a)
+
+
+def _ms_fwd(x, B_t, C_t, dt, log_a):
+    return mamba_ssd(x, B_t, C_t, dt, log_a), (x, B_t, C_t, dt, log_a)
+
+
+def _ms_bwd(res, ct):
+    from repro.kernels import ref
+    _, vjp = jax.vjp(lambda *a: ref.mamba_ssd_ref(*a)[0], *res)
+    return vjp(ct)
+
+
+mamba_ssd_trainable.defvjp(_ms_fwd, _ms_bwd)
+
+
+@jax.custom_vjp
+def rwkv6_scan_trainable(r, k, v, w, u):
+    """Differentiable wrapper: Pallas wkv kernel forward, oracle backward."""
+    return rwkv6_scan(r, k, v, w, u)
+
+
+def _rwkv_fwd(r, k, v, w, u):
+    return rwkv6_scan(r, k, v, w, u), (r, k, v, w, u)
+
+
+def _rwkv_bwd(res, ct):
+    from repro.kernels import ref
+    r, k, v, w, u = res
+    _, vjp = jax.vjp(lambda *a: ref.rwkv6_ref(*a)[0], r, k, v, w, u)
+    return vjp(ct)
+
+
+rwkv6_scan_trainable.defvjp(_rwkv_fwd, _rwkv_bwd)

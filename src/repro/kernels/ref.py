@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel.  The kernels must match these
+(assert_allclose) across shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """q: (B,H,Sq,hd), k/v: (B,KV,Skv,hd) -> (B,H,Sq,hd).  GQA by H % KV == 0."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores * hd ** -0.5
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    pq = jnp.arange(Sq)[:, None]
+    pk = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= pq >= pk
+    if window is not None:
+        mask &= (pq - pk) < window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def mamba_ssd_ref(x, B_t, C_t, dt, log_a, state=None):
+    """Mamba2 SSD core oracle (sequential scan).
+
+    x: (B,H,S,P) inputs; B_t/C_t: (B,S,N) shared across heads; dt: (B,H,S);
+    log_a: (B,H,S) per-step log decay (<= 0).
+    h_t = exp(log_a_t) h_{t-1} + dt_t * B_t (x) x_t;  y_t = C_t . h_t.
+    Returns (y (B,H,S,P), final_state (B,H,N,P))."""
+    Bb, H, S, P = x.shape
+    N = B_t.shape[-1]
+    xf = x.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((Bb, H, N, P), jnp.float32)
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t, la_t = inp
+        h = jnp.exp(la_t)[..., None, None] * h + \
+            dt_t[..., None, None] * jnp.einsum("bn,bhp->bhnp", b_t, x_t)
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, h)
+        return h, y_t
+
+    seq = (xf.transpose(2, 0, 1, 3), B_t.astype(jnp.float32).transpose(1, 0, 2),
+           C_t.astype(jnp.float32).transpose(1, 0, 2),
+           dt.astype(jnp.float32).transpose(2, 0, 1),
+           log_a.astype(jnp.float32).transpose(2, 0, 1))
+    final, y = jax.lax.scan(step, state, seq)
+    return y.transpose(1, 2, 0, 3).astype(x.dtype), final
+
+
+def rwkv6_ref(r, k, v, w, u, state=None):
+    """RWKV6 wkv recurrence oracle (sequential scan).
+
+    r,k,v: (B,H,S,C); w: (B,H,S,C) decay in (0,1); u: (H,C) bonus.
+    Returns (out (B,H,S,C), final_state (B,H,C,C))."""
+    B, H, S, C = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, C, C), jnp.float32)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + uf[None, :, :, None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, o_t
+
+    seq = tuple(a.transpose(2, 0, 1, 3) for a in (rf, kf, vf, wf))
+    final, o = jax.lax.scan(step, state, seq)
+    return o.transpose(1, 2, 0, 3).astype(r.dtype), final

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes without allocating a single full-size weight.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-moe-a2.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+Everything is ShapeDtypeStructs: parameters via Model.abstract_params(),
+decode caches via jax.eval_shape(Model.init_cache).  ``compile()`` succeeding
+proves the sharding config is coherent (no mismatched collectives, fits
+per-device HBM); memory_analysis/cost_analysis feed EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCHS, SHAPES, ShapeConfig, get_config, shapes_for
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.train.trainer import make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([0-9,]*)\]")
+BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+         "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic by op kind, from the partitioned HLO."""
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        result, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in SHAPE_RE.finditer(result):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def abstract_batch(cfg, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch = {"tokens": tok}
+    if cfg.family == "encdec":
+        batch["enc_feats"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["img"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def batch_pspecs(batch, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: shd.batch_pspec(mesh, s.shape[0], len(s.shape),
+                                  dim1=s.shape[1] if len(s.shape) > 1 else None),
+        batch)
+
+
+def n_micro_for(cfg, shape: ShapeConfig, mesh, micro_tokens: int = 8192) -> int:
+    """Grad-accum microbatches: keep per-device microbatch tokens ~<= target."""
+    fsdp = 1
+    for a in shd.data_axes(mesh):
+        fsdp *= mesh.shape[a]
+    tokens_per_dev = shape.global_batch * shape.seq_len / fsdp
+    n = max(1, int(tokens_per_dev // micro_tokens))
+    while shape.global_batch % (n * fsdp) != 0 and n > 1:
+        n -= 1
+    return n
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
+               model_overrides: Optional[dict] = None,
+               micro_tokens: int = 8192,
+               seq_parallel: bool = False,
+               hsdp: bool = False):
+    from repro.core import settings
+    cfg = get_config(arch)
+    if model_overrides:
+        cfg = cfg.replace(**model_overrides)
+    shape = SHAPES[shape_name]
+    if shape.kind == "prefill" and (not model_overrides
+                                    or "attn_q_chunk" not in model_overrides):
+        # 32k-token prefill: small q blocks keep f32 score temps bounded
+        cfg = cfg.replace(attn_q_chunk=256)
+    model = Model(cfg)
+    shd.HSDP = hsdp
+    fa = shd.data_axes(mesh)
+    faxis = fa if len(fa) > 1 else fa[0]
+    model.batch_spec = P(faxis)
+    settings.set_act_spec(P(faxis, "model") if seq_parallel else None)
+
+    aparams = model.abstract_params()
+    pspecs = shd.param_pspecs(model.logical_axes(), aparams, mesh)
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+              "kind": shape.kind}
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = AdamW(lr=1e-5)
+            aopt = jax.eval_shape(opt.init, aparams)
+            opt_pspecs = {"m": pspecs, "v": pspecs, "step": P()}
+            batch = abstract_batch(cfg, shape, mesh)
+            bspecs = batch_pspecs(batch, mesh)
+            nm = n_micro_for(cfg, shape, mesh, micro_tokens)
+            result["n_micro"] = nm
+            step = make_train_step(model, opt, n_micro=nm)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspecs, opt_pspecs, bspecs),
+                out_shardings=(pspecs, opt_pspecs, None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(aparams, aopt, batch)
+        else:
+            B, S = shape.global_batch, shape.seq_len
+            extras = {}
+            if cfg.family == "encdec":
+                extras["enc_feats"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+            if cfg.family == "vlm":
+                extras["img"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+            if extras:
+                acache = jax.eval_shape(
+                    lambda p, ex: model.init_cache(p, B, S, extras=ex),
+                    aparams, extras)
+            else:
+                acache = jax.eval_shape(
+                    lambda p: model.init_cache(p, B, S), aparams)
+            cspecs = shd.cache_pspecs(acache, mesh, B,
+                                      kv_heads=cfg.num_kv_heads)
+            if shape.kind == "prefill":
+                tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            else:
+                tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            tspec = shd.batch_pspec(mesh, B, 2, dim1=tok.shape[1])
+
+            def serve_step(params, cache, token):
+                return model.decode_step(params, cache, token)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(pspecs, cspecs, tspec),
+                out_shardings=(None, cspecs),
+                donate_argnums=(1,))
+            lowered = jitted.lower(aparams, acache, tok)
+
+        result["lower_s"] = round(time.time() - t0, 1)
+        if not compile_:
+            return result, lowered, None
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[attr] = int(v)
+    cost = compiled.cost_analysis()
+    if cost:
+        result["flops"] = float(cost.get("flops", 0.0))
+        result["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+    result["collectives"] = collective_bytes(compiled.as_text())
+    return result, lowered, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--hsdp", action="store_true")
+    ap.add_argument("--micro-tokens", type=int, default=8192)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for sh in shapes_for(arch):
+                cells.append((arch, sh.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    results = []
+    for mesh in meshes:
+        for arch, sh in cells:
+            tag = f"{arch} x {sh} @ {tuple(mesh.shape.values())}"
+            try:
+                res, _, compiled = lower_cell(
+                    arch, sh, mesh, micro_tokens=args.micro_tokens,
+                    seq_parallel=args.seq_parallel, hsdp=args.hsdp)
+                print(f"[OK]   {tag}  flops={res.get('flops', 0):.3e} "
+                      f"coll={sum(res.get('collectives', {}).values()):.3e}B "
+                      f"lower={res['lower_s']}s compile={res.get('compile_s')}s",
+                      flush=True)
+                results.append(res)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:400]}", flush=True)
+                results.append({"arch": arch, "shape": sh, "error": str(e)[:2000],
+                                "mesh": "x".join(str(s) for s in mesh.shape.values())})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(bad)}/{len(results)} cells OK")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

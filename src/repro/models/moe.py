@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer: top-k router + GShard-style grouped-capacity
+dispatch/combine einsums + shared experts.
+
+TPU adaptation (DESIGN.md §2): instead of CUDA scatter/gather we use the
+dense one-hot dispatch einsum over (group, token, expert, capacity).  Tokens
+are split into groups of <=512 so the dispatch tensor is linear in total
+tokens: T * E * C = T * group * k * cf.  Experts are zero-padded to a
+multiple of 16 (EP_PAD) so the expert axis divides the `model` mesh axis
+(padded experts are masked to -inf in the router and receive no tokens).
+
+Routers can be frozen (paper stage 2) via the schedule mask — the router
+weight lives at key "router" in the layer param dict.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import ParamSpec
+
+EP_PAD = 16
+GROUP = 512
+
+
+def padded_experts(num_experts: int) -> int:
+    if num_experts >= EP_PAD:
+        return int(math.ceil(num_experts / EP_PAD) * EP_PAD)
+    return num_experts
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, padded_experts(cfg.num_experts), cfg.d_ff_expert
+    p = {
+        "router": ParamSpec((d, e), ("embed", None), init="normal"),
+        "w_gate": ParamSpec((e, d, ff), ("experts", "embed", "expert_mlp")),
+        "w_up": ParamSpec((e, d, ff), ("experts", "embed", "expert_mlp")),
+        "w_down": ParamSpec((e, ff, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.num_shared_experts > 0:
+        ffs = cfg.num_shared_experts * cfg.d_ff_expert
+        p["shared"] = {
+            "w_gate": ParamSpec((d, ffs), ("embed", "mlp")),
+            "w_up": ParamSpec((d, ffs), ("embed", "mlp")),
+            "w_down": ParamSpec((ffs, d), ("mlp", "embed")),
+            "gate": ParamSpec((d, 1), ("embed", None), init="zeros"),
+        }
+    return p
+
+
+def _capacity(tokens_per_group: int, num_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(math.ceil(tokens_per_group * top_k * capacity_factor / num_experts))
+    return max(4, int(math.ceil(c / 4) * 4))
+
+
+def moe_apply(p, cfg: ModelConfig, x, *, group: Optional[int] = None):
+    """x: (B, S, d) -> (y, aux_loss).  Pure einsum path, GSPMD-shardable."""
+    B, S, d = x.shape
+    E, k = padded_experts(cfg.num_experts), cfg.top_k
+    T = B * S
+    g_size = min(group or GROUP, T)
+    assert T % g_size == 0, (T, g_size)
+    G = T // g_size
+    xg = x.reshape(G, g_size, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    if E > cfg.num_experts:  # mask padded experts
+        pad_mask = jnp.arange(E) < cfg.num_experts
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (G, t, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # position-in-expert with top-k priority (k-major within token order)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (G, t, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * g_size, E)  # k-major
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (G, k*t, E)
+    C = _capacity(g_size, E, k, cfg.capacity_factor)
+    keep = (pos < C) * flat
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # back to token-major: (G, k, t, E, C) -> sum over k
+    pos_oh = pos_oh.reshape(G, k, g_size, E, C)
+    dispatch = jnp.sum(pos_oh, axis=1)                         # (G, t, E, C) 0/1
+    gates_te = jnp.einsum("gtke,gtk->gte",
+                          onehot * keep.reshape(G, k, g_size, E).transpose(0, 2, 1, 3),
+                          gate_vals)
+    combine = dispatch * gates_te[..., None]                   # (G, t, E, C)
+
+    # dispatch -> expert compute -> combine
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), expert_out)
+    y = y.reshape(B, S, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sh["w_gate"])) * \
+             jnp.einsum("bsd,df->bsf", x, sh["w_up"])
+        ys = jnp.einsum("bsf,fd->bsd", hs, sh["w_down"])
+        sgate = jax.nn.sigmoid(jnp.einsum("bsd,do->bso", x, sh["gate"]))
+        y = y + sgate.astype(y.dtype) * ys
+
+    # load-balancing aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=1)           # (G, E)
+    mean_p = jnp.mean(probs, axis=1)                           # (G, E)
+    aux = cfg.num_experts * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+    return y, aux.astype(jnp.float32)
+
+
+def moe_apply_oracle(p, cfg: ModelConfig, x):
+    """Dense per-token oracle (computes every expert on every token).
+    Used only in tests to validate the dispatch path (no capacity drops when
+    capacity_factor is large)."""
+    B, S, d = x.shape
+    E, k = padded_experts(cfg.num_experts), cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    if E > cfg.num_experts:
+        logits = jnp.where((jnp.arange(E) < cfg.num_experts)[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    # all experts on all tokens
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, p["w_gate"])) * \
+        jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    out_all = jnp.einsum("bsef,efd->bsed", h, p["w_down"])      # (B,S,E,d)
+    sel = jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+                  * gate_vals[..., None], axis=2)               # (B,S,E)
+    y = jnp.einsum("bse,bsed->bsd", sel.astype(x.dtype), out_all)
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])
+        y = y + jax.nn.sigmoid(x @ sh["gate"]).astype(y.dtype) * (hs @ sh["w_down"])
+    return y

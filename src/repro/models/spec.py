@@ -1,0 +1,87 @@
+"""Declarative parameter specs.
+
+A model is described as a pytree of ``ParamSpec`` leaves.  From one spec tree we
+derive, without ever materialising full-size weights:
+
+  * ``abstract(tree)``       -> jax.ShapeDtypeStruct tree (dry-run lowering)
+  * ``initialize(tree, key)`` -> actual parameter tree (smoke tests / training)
+  * ``logical_axes(tree)``   -> tree of logical-axis-name tuples (sharding rules)
+
+Stacked (scanned) layers are expressed by ``stack(n, tree)`` which prepends a
+("layers", n) dimension to every leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names, len == len(shape)
+    init: str = "fan_in"                     # fan_in | zeros | ones | normal | small
+    dtype: Optional[str] = None              # override model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map(tree, fn):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def stack(n: int, tree):
+    """Prepend a scanned-layers dimension to every spec in the tree."""
+    return _map(tree, lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                                          s.init, s.dtype))
+
+
+def abstract(tree, dtype: str):
+    return _map(tree, lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or dtype)))
+
+
+def logical_axes(tree):
+    return _map(tree, lambda s: s.axes)
+
+
+def _init_leaf(spec: ParamSpec, key, dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype or dtype)
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(shape, dt)
+    if spec.init == "normal":
+        return (0.02 * jax.random.normal(key, shape)).astype(dt)
+    if spec.init == "small":
+        return (0.006 * jax.random.normal(key, shape)).astype(dt)
+    if spec.init == "unit_normal":
+        # unit-RMS rows: keeps hidden-state scale ~1 so the reversible fixed
+        # point is contractive (see DESIGN.md §2 — matches pretrained stats)
+        return jax.random.normal(key, shape).astype(dt)
+    if spec.init == "fan_in":
+        # fan-in scaled; for stacked specs skip the leading layers dim
+        fan = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(key, shape) / math.sqrt(max(fan, 1))).astype(dt)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def initialize(tree, key, dtype: str):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

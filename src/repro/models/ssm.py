@@ -1,0 +1,292 @@
+"""State-space / linear-recurrence token mixers: Mamba2 (SSD) and RWKV6.
+
+Mamba2 uses the chunked SSD formulation (intra-chunk quadratic attention-like
+matmuls + inter-chunk state carry) — matmul-heavy, maps to the MXU.  Decays are
+scalar-per-head so all exponentials are of non-positive numbers (safe).
+
+RWKV6 has per-channel data-dependent decay; the pure-jnp path below is a time
+scan (the sequential recurrence is the definition).  The Pallas kernel
+(repro/kernels/rwkv6_scan.py) is the performance path with chunked VMEM tiling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import ParamSpec
+
+MAMBA_HEAD = 64
+CHUNK = 128
+
+
+# ================================================================ Mamba2
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = max(1, d_inner // MAMBA_HEAD)
+    P = d_inner // nh
+    return d_inner, nh, P
+
+
+def mamba_specs(cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    d_inner, nh, P = mamba_dims(cfg)
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    return {
+        "w_x": ParamSpec((d, d_inner), ("embed", "mlp")),
+        "w_z": ParamSpec((d, d_inner), ("embed", "mlp")),
+        "w_B": ParamSpec((d, N), ("embed", None)),
+        "w_C": ParamSpec((d, N), ("embed", None)),
+        "w_dt": ParamSpec((d, nh), ("embed", None)),
+        "dt_bias": ParamSpec((nh,), (None,), init="zeros"),
+        "A_log": ParamSpec((nh,), (None,), init="zeros"),
+        "D": ParamSpec((nh,), (None,), init="ones"),
+        "conv_w": ParamSpec((K, d_inner), (None, "mlp"), init="small"),
+        "conv_b": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "norm": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "w_out": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(xin, w, b, tail=None):
+    """Depthwise causal conv, window K.  tail: (B, K-1, d_inner) decode cache."""
+    K = w.shape[0]
+    B, S, D = xin.shape
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, D), xin.dtype)
+    xp = jnp.concatenate([tail, xin], axis=1)
+    out = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    new_tail = xp[:, S:S + K - 1, :] if S >= K - 1 else xp[:, -(K - 1):, :]
+    return out + b[None, None, :], new_tail
+
+
+def mamba_apply(p, cfg: ModelConfig, x, state=None, conv_tail=None,
+                return_state: bool = False):
+    """x: (B,S,d).  Chunked SSD.  state: (B,nh,N,P) carry for decode."""
+    B, S, _ = x.shape
+    d_inner, nh, P = mamba_dims(cfg)
+    N = cfg.ssm_state
+
+    xin = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    xc, new_tail = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_tail)
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))            # (B,S,nh)
+    Bt = jnp.einsum("bsd,dn->bsn", x, p["w_B"]).astype(jnp.float32)
+    Ct = jnp.einsum("bsd,dn->bsn", x, p["w_C"]).astype(jnp.float32)
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32))[None, None, :] * dt  # <= 0
+    xh = xc.reshape(B, S, nh, P).astype(jnp.float32)
+
+    if (cfg.use_flash_kernel and state is None and not return_state
+            and S % 128 == 0 and S >= 128):
+        # Pallas SSD kernel backend: state in VMEM, chunked matmuls
+        from repro.kernels import ops as kops
+        yk = kops.mamba_ssd_trainable(
+            xh.transpose(0, 2, 1, 3), Bt, Ct,
+            dt.transpose(0, 2, 1), log_a.transpose(0, 2, 1))
+        y = yk.transpose(0, 2, 1, 3)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+        y = y.reshape(B, S, d_inner).astype(x.dtype)
+        g = y * jax.nn.silu(z)
+        gf = g.astype(jnp.float32)
+        var = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+        g = (gf * jax.lax.rsqrt(var + cfg.norm_eps)
+             * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+        return jnp.einsum("bsi,id->bsd", g, p["w_out"])
+
+    L = min(CHUNK, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    def chunk_reshape(a):
+        return a.reshape((B, nc, L) + a.shape[2:])
+
+    la = jnp.cumsum(chunk_reshape(log_a), axis=2)                # (B,nc,L,nh)
+    Bc, Cc = chunk_reshape(Bt), chunk_reshape(Ct)
+    dtc, xhc = chunk_reshape(dt), chunk_reshape(xh)
+
+    # intra-chunk: scores[t,s] = (C_t . B_s) * exp(la_t - la_s) * dt_s, s <= t
+    # (mask inside the exp: la_t - la_s > 0 for s > t can overflow f32)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)                   # (B,nc,L,L)
+    tri = jnp.tril(jnp.ones((L, L), jnp.bool_))
+    ladiff = la[:, :, :, None, :] - la[:, :, None, :, :]          # (B,nc,L,L,nh)
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], ladiff, -1e30))
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", scores, xhc)
+
+    # inter-chunk state carry
+    chunk_in = jnp.einsum("bcsh,bcsn,bcshp->bchnp",
+                          jnp.exp(la[:, :, -1:, :] - la) * dtc, Bc, xhc)
+    a_chunk = jnp.exp(la[:, :, -1, :])                           # (B,nc,nh)
+
+    if state is None:
+        state = jnp.zeros((B, nh, N, P), jnp.float32)
+
+    def body(h, inp):
+        a_c, cin, Cck, lak = inp                                 # per chunk
+        y_in = jnp.einsum("btn,bhnp,bth->bthp", Cck, h, jnp.exp(lak))
+        h = a_c[:, :, None, None] * h + cin
+        return h, y_in
+
+    xs = (a_chunk.transpose(1, 0, 2), chunk_in.transpose(1, 0, 2, 3, 4),
+          Cc.transpose(1, 0, 2, 3), la.transpose(1, 0, 2, 3))
+    final_state, y_inter = jax.lax.scan(body, state, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)                   # (B,nc,L,nh,P)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, P)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+
+    # gated RMSNorm + out projection
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", g, p["w_out"])
+    if return_state:
+        return out, final_state, new_tail
+    return out
+
+
+# ================================================================ RWKV6
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv_head_size or 64
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def rwkv_time_specs(cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    H, hd = rwkv_dims_for(d, cfg)
+    return {
+        "mu": ParamSpec((5, d), (None, "embed"), init="small"),   # r,k,v,w,g mixes
+        "w_r": ParamSpec((d, d), ("embed", "heads")),
+        "w_k": ParamSpec((d, d), ("embed", "heads")),
+        "w_v": ParamSpec((d, d), ("embed", "heads")),
+        "w_g": ParamSpec((d, d), ("embed", "heads")),
+        "w_o": ParamSpec((d, d), ("heads", "embed")),
+        "decay_base": ParamSpec((d,), ("heads",), init="zeros"),
+        "decay_a": ParamSpec((d, 64), ("embed", None), init="small"),
+        "decay_b": ParamSpec((64, d), (None, "heads"), init="zeros"),
+        "u": ParamSpec((H, hd), (None, None), init="zeros"),
+        "ln": ParamSpec((d,), ("heads",), init="zeros"),
+    }
+
+
+def rwkv_dims_for(d: int, cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv_head_size or 64
+    hd = min(hd, d)
+    H = d // hd
+    return H, hd
+
+
+def rwkv_channel_specs(cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    ff = cfg.d_ff
+    return {
+        "mu": ParamSpec((2, d), (None, "embed"), init="small"),   # k, r mixes
+        "w_k": ParamSpec((d, ff), ("embed", "mlp")),
+        "w_v": ParamSpec((ff, d), ("mlp", "embed")),
+        "w_r": ParamSpec((d, d), ("embed", "embed_out")),
+    }
+
+
+def _token_shift(x, last_x=None):
+    B, S, d = x.shape
+    if last_x is None:
+        last_x = jnp.zeros((B, d), x.dtype)
+    return jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_apply(p, cfg: ModelConfig, x, state=None, last_x=None,
+                    return_state: bool = False):
+    """RWKV6 time mix.  x: (B,S,d).  state: (B,H,hd,hd) [key x value]."""
+    B, S, d = x.shape
+    H, hd = rwkv_dims_for(d, cfg)
+
+    xs = _token_shift(x, last_x)
+    mix = x[:, :, None, :] + p["mu"][None, None] * (xs - x)[:, :, None, :]
+    xr, xk, xv, xw, xg = [mix[:, :, i, :] for i in range(5)]
+
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+
+    dlora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_a"].astype(jnp.float32)) \
+        @ p["decay_b"].astype(jnp.float32)
+    log_w = -jnp.exp(p["decay_base"].astype(jnp.float32)[None, None] + dlora)
+    w = jnp.exp(log_w).reshape(B, S, H, hd)                      # in (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    if (cfg.use_flash_kernel and state is None and last_x is None
+            and not return_state and S % 64 == 0 and S >= 64):
+        # Pallas wkv kernel backend (train path); surrounding projections,
+        # token shift, group norm and gating stay jnp.
+        from repro.kernels import ops as kops
+        o = kops.rwkv6_scan_trainable(
+            r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), w.transpose(0, 2, 1, 3), u)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, H, hd)
+        var = jnp.mean(jnp.square(o), axis=-1, keepdims=True)
+        o = o * jax.lax.rsqrt(var + 64e-5)
+        o = o.reshape(B, S, d) * (1.0 + p["ln"].astype(jnp.float32))[None, None]
+        return (o.astype(x.dtype) * g) @ p["w_o"]
+
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp                                 # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]               # (B,H,hd,hd)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None, :, :, None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, o_t
+
+    seq = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    TC = 128
+    if S > TC and S % TC == 0:
+        # chunk the recurrence and rematerialise within chunks: AD saves only
+        # chunk-boundary states instead of all S carries (the Pallas kernel
+        # rwkv6_scan.py is the real fix on TPU; this bounds the jnp fallback)
+        chunked = jax.tree_util.tree_map(
+            lambda a: a.reshape((S // TC, TC) + a.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_body(S_, inp_chunk):
+            return jax.lax.scan(step, S_, inp_chunk)
+
+        final_state, o = jax.lax.scan(chunk_body, state, chunked)
+        o = o.reshape((S,) + o.shape[2:])
+    else:
+        final_state, o = jax.lax.scan(step, state, seq)
+    o = o.transpose(1, 0, 2, 3)                                  # (B,S,H,hd)
+
+    # per-head group norm
+    var = jnp.mean(jnp.square(o), axis=-1, keepdims=True)
+    o = o * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(B, S, d) * (1.0 + p["ln"].astype(jnp.float32))[None, None]
+    out = (o.astype(x.dtype) * g) @ p["w_o"]
+    if return_state:
+        return out, final_state, x[:, -1, :]
+    return out
+
+
+def rwkv_channel_apply(p, cfg: ModelConfig, x, last_x=None,
+                       return_state: bool = False):
+    xs = _token_shift(x, last_x)
+    mk = x + p["mu"][0][None, None] * (xs - x)
+    mr = x + p["mu"][1][None, None] * (xs - x)
+    kk = jnp.square(jax.nn.relu(mk @ p["w_k"]))
+    out = jax.nn.sigmoid(mr @ p["w_r"]) * (kk @ p["w_v"])
+    if return_state:
+        return out, x[:, -1, :]
+    return out

@@ -1,0 +1,75 @@
+"""AdamW with ZeRO-compatible sharded state, global-norm clipping, trainable
+masks (two-stage schedule), and f32 master state over low-precision params.
+
+State shards exactly like the parameters (same PartitionSpecs): combined with
+the FSDP rules in repro.distributed.sharding this is ZeRO-3 — parameters,
+gradients and optimizer state all partitioned over the ("pod","data") axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-5
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    lr_schedule: Optional[Callable] = None   # step -> multiplier
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, mask=None):
+        step = state["step"] + 1
+        gf = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gn = global_norm(gf)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            gf = jax.tree_util.tree_map(lambda g: g * scale, gf)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                                   state["m"], gf)
+        v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                                   state["v"], gf)
+        mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** step.astype(jnp.float32)), m)
+        vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** step.astype(jnp.float32)), v)
+        lr = self.lr * (self.lr_schedule(step) if self.lr_schedule else 1.0)
+
+        def upd(p, mh_, vh_, mk):
+            u = mh_ / (jnp.sqrt(vh_) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            u = lr * u * mk
+            return (p.astype(jnp.float32) - u).astype(p.dtype)
+
+        if mask is None:
+            mask = jax.tree_util.tree_map(lambda _: 1.0, params)
+        new_params = jax.tree_util.tree_map(upd, params, mh, vh, mask)
+        return new_params, {"m": m, "v": v, "step": step}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree_util.tree_map(lambda g: jnp.sum(jnp.square(g)), tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(lambda a, b: a + b, sq, 0.0))
+
+
+def cosine_schedule(warmup: int, total: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f

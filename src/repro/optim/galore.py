@@ -1,0 +1,127 @@
+"""GaLore (paper baseline): gradient low-rank projection + Adam in the
+projected space.  Memory: optimizer state is rank-r instead of full for every
+projected matrix.
+
+For each 2D (or layer-stacked 3D) weight with min(m,n) > 2r the gradient
+G (m,n) is projected R = P^T G (projecting the longer side), Adam runs on R,
+and the update is P @ adam(R).  P is refreshed from the SVD of the current
+gradient every ``proj_gap`` steps (jnp.linalg.svd; layer-stacked leaves vmap).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _projectable(p) -> bool:
+    return p.ndim in (2, 3)
+
+
+def _svd_proj(g, rank: int):
+    """Left projector of the top-``rank`` subspace.  g: (m, n), project dim 0
+    if m >= n else dim 1 (returns (proj, side))."""
+    m, n = g.shape
+    if m >= n:
+        # P: (m, r) from left singular vectors of g
+        u, _, _ = jnp.linalg.svd(g.astype(jnp.float32), full_matrices=False)
+        return u[:, :rank], 0
+    _, _, vt = jnp.linalg.svd(g.astype(jnp.float32), full_matrices=False)
+    return vt[:rank, :].T, 1        # (n, r)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaLore:
+    lr: float = 1e-5
+    rank: int = 32
+    proj_gap: int = 200
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    scale: float = 0.25
+
+    def _leaf_meta(self, p):
+        if p.ndim < 2:
+            return False, 0, p.shape
+        shape = p.shape[-2:]
+        use = _projectable(p) and min(shape) > 2 * self.rank
+        side = 0 if shape[0] >= shape[1] else 1
+        return use, side, shape
+
+    def init(self, params):
+        def leaf(p):
+            use, side, shape = self._leaf_meta(p)
+            if not use:
+                return {"m": jnp.zeros(p.shape, jnp.float32),
+                        "v": jnp.zeros(p.shape, jnp.float32)}
+            r = self.rank
+            lead = p.shape[:-2]
+            rs = lead + ((r, shape[1]) if side == 0 else (shape[0], r))
+            ps = lead + ((shape[0], r) if side == 0 else (shape[1], r))
+            return {"m": jnp.zeros(rs, jnp.float32),
+                    "v": jnp.zeros(rs, jnp.float32),
+                    "proj": jnp.zeros(ps, jnp.float32)}
+        return {"leaves": jax.tree_util.tree_map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, mask=None):
+        step = state["step"] + 1
+        refresh = (step - 1) % self.proj_gap == 0
+        b1, b2 = self.b1, self.b2
+        if mask is None:
+            mask = jax.tree_util.tree_map(lambda _: 1.0, params)
+
+        def leaf(p, g, st, mk):
+            g = g.astype(jnp.float32)
+            use, side, _ = self._leaf_meta(p)
+            if not use:
+                m = b1 * st["m"] + (1 - b1) * g
+                v = b2 * st["v"] + (1 - b2) * g * g
+                upd = m / (jnp.sqrt(v) + self.eps)
+                new_p = (p.astype(jnp.float32) - self.lr * upd * mk).astype(p.dtype)
+                return new_p, {"m": m, "v": v}
+
+            def proj_fn(gg):
+                pr, _ = _svd_proj(gg, self.rank)
+                return pr
+            if p.ndim == 3:
+                new_proj = jax.lax.cond(
+                    refresh, lambda: jax.vmap(proj_fn)(g), lambda: st["proj"])
+            else:
+                new_proj = jax.lax.cond(
+                    refresh, lambda: proj_fn(g), lambda: st["proj"])
+
+            def project(gg, pr):
+                return pr.T @ gg if side == 0 else gg @ pr
+            def unproject(rr, pr):
+                return pr @ rr if side == 0 else rr @ pr.T
+            if p.ndim == 3:
+                R = jax.vmap(project)(g, new_proj)
+            else:
+                R = project(g, new_proj)
+            m = b1 * st["m"] + (1 - b1) * R
+            v = b2 * st["v"] + (1 - b2) * R * R
+            upd_r = m / (jnp.sqrt(v) + self.eps)
+            if p.ndim == 3:
+                upd = jax.vmap(unproject)(upd_r, new_proj)
+            else:
+                upd = unproject(upd_r, new_proj)
+            new_p = (p.astype(jnp.float32)
+                     - self.lr * self.scale * upd * mk).astype(p.dtype)
+            return new_p, {"m": m, "v": v, "proj": new_proj}
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_s = tdef.flatten_up_to(state["leaves"])
+        flat_m = jax.tree_util.tree_leaves(mask)
+        outs = [leaf(p, g, s, mk) for p, g, s, mk
+                in zip(flat_p, flat_g, flat_s, flat_m)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_leaves = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"leaves": new_leaves, "step": step}
+
+
+def state_bytes(state) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(state))

@@ -1,0 +1,39 @@
+"""LoMo (paper baseline): fused gradient/update with zero optimizer state.
+
+The PyTorch LoMo fuses SGD into backward hooks so gradients never persist.
+JAX's functional AD has no hooks; the equivalent memory semantics here are
+(a) no m/v state at all and (b) the jitted step donates the gradient buffers
+so XLA reuses them in-place (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LoMo:
+    lr: float = 1e-4
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, mask=None):
+        if mask is None:
+            mask = jax.tree_util.tree_map(lambda _: 1.0, params)
+        if self.clip_norm:
+            from repro.optim.adamw import global_norm
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+        else:
+            scale = 1.0
+
+        def upd(p, g, mk):
+            return (p.astype(jnp.float32)
+                    - self.lr * scale * g.astype(jnp.float32) * mk).astype(p.dtype)
+
+        return (jax.tree_util.tree_map(upd, params, grads, mask),
+                {"step": state["step"] + 1})

@@ -1,0 +1,116 @@
+"""Continuous-batching serving engine.
+
+Production pattern mapped to JAX: a fixed number of decode SLOTS, each with
+its own cache tree and position counter, batched by vmap — so every slot
+tracks its own `t` (rope positions and cache writes stay correct under
+staggered admission, unlike a shared global counter).  Each engine step
+decodes all slots in one jitted vmapped call; finished sequences (EOS or
+max-new-tokens) free their slot and queued requests are prefilled into free
+slots by splicing a freshly prefilled single-sequence cache into the stacked
+slot axis (dynamic_update_slice — admission never recompiles).
+
+Rolling-window / SSM-state caches work unchanged (the cache tree is whatever
+Model.init_cache builds).  Admission is strictly FIFO; a request longer than
+the cache buffer is rejected at submit time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: int = 2
+    generated: Optional[List[int]] = None   # filled by the engine
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, slots: int = 4, buf_len: int = 256,
+                 extras=None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.buf_len = buf_len
+        # stacked per-slot caches: leading axis = slot, each slot batch=1
+        one = model.init_cache(params, 1, buf_len, extras=extras)
+        self.cache = jax.tree_util.tree_map(
+            lambda a: jnp.stack([a] * slots), one)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: deque = deque()
+        self.done: Dict[int, Request] = {}
+        self.last_tok = jnp.zeros((slots, 1, 1), jnp.int32)
+
+        def _one_step(cache_slot, tok):
+            return model.decode_step(params, cache_slot, tok)
+
+        self._decode = jax.jit(jax.vmap(_one_step))
+        self._prefill = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------ submit
+
+    def submit(self, req: Request):
+        if req.prompt.size + req.max_new_tokens > self.buf_len:
+            raise ValueError(
+                f"request {req.uid} needs {req.prompt.size + req.max_new_tokens}"
+                f" cache slots > buffer {self.buf_len}")
+        req.generated = []
+        self.queue.append(req)
+
+    # ------------------------------------------------------------ admission
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            fresh = self.model.init_cache(self.params, 1, self.buf_len)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, fresh = self._prefill(self.params, fresh, prompt)
+            tok = jnp.argmax(logits[:, -1:], axis=-1)
+
+            # splice the prefilled single-sequence cache into slot s
+            self.cache = jax.tree_util.tree_map(
+                lambda stacked, single: jax.lax.dynamic_update_slice(
+                    stacked, single[None].astype(stacked.dtype),
+                    (s,) + (0,) * single.ndim),
+                self.cache, fresh)
+            self.active[s] = req
+            self.last_tok = self.last_tok.at[s, 0, 0].set(tok[0, 0])
+            req.generated.append(int(tok[0, 0]))
+
+    # ------------------------------------------------------------ stepping
+
+    def step(self) -> int:
+        """Admit + one decode step for all slots.  Returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.cache = self._decode(self.cache, self.last_tok)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))
+        new_last = np.asarray(self.last_tok).copy()
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.generated.append(tok)
+            new_last[s, 0, 0] = tok
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                self.done[req.uid] = req
+                self.active[s] = None
+        self.last_tok = jnp.asarray(new_last)
+        return sum(1 for r in self.active if r is not None)
+
+    def run(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.done

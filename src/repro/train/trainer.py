@@ -1,0 +1,56 @@
+"""Training step construction: gradient accumulation over microbatches
+(scan — lets XLA pipeline the reduce of microbatch k with the backward of
+microbatch k+1), optional gradient compression, stage masks, metrics.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import global_norm
+
+
+def make_train_step(model, optimizer, *, n_micro: int = 1,
+                    mask_fn: Optional[Callable] = None,
+                    compress: Optional[Callable] = None,
+                    save_memory: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch leaves have leading dim global_batch; grad accumulation splits it
+    into ``n_micro`` slices scanned sequentially (activation memory = one
+    microbatch)."""
+
+    def loss_fn(params, mbatch):
+        return model.loss(params, mbatch, save_memory=save_memory)
+
+    def train_step(params, opt_state, batch):
+        if n_micro > 1:
+            resh = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch)
+
+            def body(acc, mbatch):
+                loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + loss), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (zero_g, 0.0), resh)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if compress is not None:
+            grads = compress(grads)
+        mask = mask_fn(params) if mask_fn else None
+        gnorm = global_norm(grads)
+        params, opt_state = optimizer.update(grads, opt_state, params, mask=mask)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt_state["step"]}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# smoke tests / benches must see ONE device — the 512-device XLA flag is set
+# only inside repro.launch.dryrun (never globally here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,72 @@
+"""MoE layer: dispatch-vs-oracle, expert padding masking, capacity behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models import moe as moe_lib
+from repro.models.spec import initialize
+
+
+def _layer(cfg, key):
+    return initialize(moe_lib.moe_specs(cfg), key, "float32")
+
+
+def test_dispatch_matches_oracle_with_headroom():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(capacity_factor=16.0)
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.5
+    y, aux = moe_lib.moe_apply(p, cfg, x, group=32)
+    want = moe_lib.moe_apply_oracle(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert float(aux) > 0.0
+
+
+def test_padded_experts_receive_nothing():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    # force padding: 60 real -> 64 padded at full scale; reduced uses 8, so
+    # emulate with a fake 6-expert config padded to... only E>=16 pads.
+    cfg = cfg.replace(num_experts=60, d_ff_expert=8)
+    assert moe_lib.padded_experts(60) == 64
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(jnp.where(jnp.arange(64) < 60, logits, -1e30), -1)
+    assert float(jnp.max(probs[..., 60:])) == 0.0
+    y, _ = moe_lib.moe_apply(p, cfg, x, group=32)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_capacity_drops_only_reduce_norm(seed):
+    """With tiny capacity some tokens get dropped; outputs stay finite and
+    dropped-token outputs come only from the shared expert."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(capacity_factor=0.25)
+    p = _layer(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 64, cfg.d_model))
+    y, aux = moe_lib.moe_apply(p, cfg, x, group=64)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_top1_moe_llama4():
+    cfg = get_config("llama4-scout-17b-a16e", reduced=True).replace(
+        capacity_factor=16.0)
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.5
+    y, _ = moe_lib.moe_apply(p, cfg, x, group=32)
+    want = moe_lib.moe_apply_oracle(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_grads_flow_to_experts_not_router_when_masked():
+    from repro.core import schedule
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    p = {"moe": _layer(cfg, jax.random.PRNGKey(0))}
+    mask = schedule.stage2_mask(p)
+    assert float(mask["moe"]["router"]) == 0.0
+    assert float(mask["moe"]["w_gate"]) == 1.0

@@ -1,0 +1,108 @@
+"""Optimizers: AdamW, GaLore (low-rank state), LoMo (zero state), compression
+with error feedback, two-stage masks end-to-end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.compression import (compress_with_feedback, init_error_state,
+                                     quantize_dequantize)
+from repro.optim.galore import GaLore, state_bytes
+from repro.optim.lomo import LoMo
+
+
+def _quadratic_problem():
+    target = {"w": jnp.array([[1.0, -2.0], [3.0, 0.5]]),
+              "b": jnp.array([0.1, -0.3])}
+
+    def loss(p):
+        return (jnp.sum(jnp.square(p["w"] - target["w"]))
+                + jnp.sum(jnp.square(p["b"] - target["b"])))
+    p0 = jax.tree_util.tree_map(jnp.zeros_like, target)
+    return loss, p0
+
+
+def _run(opt, steps=300):
+    loss, p = _quadratic_problem()
+    st = opt.init(p)
+    for _ in range(steps):
+        g = jax.grad(loss)(p)
+        p, st = opt.update(g, st, p)
+    return float(loss(p))
+
+
+def test_adamw_converges():
+    assert _run(AdamW(lr=5e-2, weight_decay=0.0)) < 1e-3
+
+
+def test_lomo_converges_with_zero_state():
+    opt = LoMo(lr=0.2)
+    loss, p = _quadratic_problem()
+    st = opt.init(p)
+    assert len(jax.tree_util.tree_leaves(st)) == 1   # just the step counter
+    assert _run(opt) < 1e-3
+
+
+def test_galore_low_rank_state_and_descent():
+    opt = GaLore(lr=3e-2, rank=2, proj_gap=10)
+    big = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 16))}
+    tgt = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+
+    def loss(p):
+        return jnp.mean(jnp.square(p["w"] - tgt))
+    st = opt.init(big)
+    # rank-2 moments: (2,16) not (64,16)
+    assert st["leaves"]["w"]["m"].shape == (2, 16)
+    adam_bytes = 2 * 64 * 16 * 4
+    assert state_bytes(st["leaves"]) < adam_bytes
+    l0 = float(loss(big))
+    for _ in range(50):
+        g = jax.grad(loss)(big)
+        big, st = opt.update(g, st, big)
+    assert float(loss(big)) < l0 * 0.9
+
+
+def test_adamw_mask_freezes_leaves():
+    opt = AdamW(lr=1e-1)
+    loss, p = _quadratic_problem()
+    st = opt.init(p)
+    mask = {"w": jnp.array(0.0), "b": jnp.array(1.0)}
+    g = jax.grad(loss)(p)
+    p2, _ = opt.update(g, st, p, mask=mask)
+    np.testing.assert_array_equal(p2["w"], p["w"])      # frozen
+    assert float(jnp.sum(jnp.abs(p2["b"] - p["b"]))) > 0
+
+
+def test_quantize_dequantize_bounded_error():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    deq = quantize_dequantize(g)
+    # rounding error is bounded by half a quantisation step (per-block scale)
+    bound = float(jnp.max(jnp.abs(g))) / 127 * 0.51
+    assert float(jnp.max(jnp.abs(deq - g))) <= bound
+
+
+def test_error_feedback_preserves_mean_update():
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (512,))}
+    err = init_error_state(grads)
+    total_q, total_raw = jnp.zeros((512,)), jnp.zeros((512,))
+    for i in range(20):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i), (512,))}
+        gq, err = compress_with_feedback(g, err)
+        total_q = total_q + gq["w"]
+        total_raw = total_raw + g["w"]
+    # accumulated compressed updates track accumulated raw gradients
+    np.testing.assert_allclose(np.asarray(total_q), np.asarray(total_raw),
+                               atol=0.05)
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(warmup=10, total=100)
+    assert float(f(jnp.array(0))) == 0.0
+    assert abs(float(f(jnp.array(10))) - 1.0) < 0.11
+    assert float(f(jnp.array(100))) < 0.01
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6

@@ -1,0 +1,108 @@
+"""Two-stage schedule masks + PEFT baselines (LoRA / DoRA / (IA)3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import adapters as ad
+from repro.core import schedule
+from repro.models.model import Model
+from repro.models.spec import initialize
+
+
+def _model_and_params(arch="qwen2-moe-a2.7b"):
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_stage1_trains_only_adapters_and_norms():
+    model, params = _model_and_params()
+    m = schedule.stage1_mask(params)
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, v: ("/".join(str(getattr(k, 'key', k)) for k in path),
+                         float(v)), m)
+    for name, val in jax.tree_util.tree_leaves(
+            flat, is_leaf=lambda x: isinstance(x, tuple)):
+        trainable = any(k in name for k in
+                        ("p_up", "p_down", "norm1", "norm2", "norm_mlp",
+                         "norm_cross"))
+        assert val == (1.0 if trainable else 0.0), name
+
+
+def test_stage2_freezes_routers_only():
+    model, params = _model_and_params()
+    m = schedule.stage2_mask(params)
+    n_frozen = sum(1 for v in jax.tree_util.tree_leaves(m) if float(v) == 0.0)
+    # exactly the router leaf per MoE layer stack (stacked => one leaf)
+    assert n_frozen == 1
+    assert float(m["stacks"]["layers"]["moe"]["router"]) == 0.0
+
+
+def test_trainable_fraction_stage1_small():
+    model, params = _model_and_params()
+    m1 = schedule.stage1_mask(params)
+    total = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    frac = schedule.num_trainable(m1, params) / total
+    assert frac < 0.35            # adapters are small vs backbone
+
+
+def test_lora_merge_zero_init_is_identity():
+    model, params = _model_and_params("h2o-danube-1.8b")
+    specs = model.param_specs()
+    lspecs = ad.lora_specs(specs, rank=4)
+    assert lspecs                                      # targeted something
+    lparams = initialize(lspecs, jax.random.PRNGKey(1), "float32")
+    merged = ad.merge_lora(params, lparams)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(merged)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_lora_merge_changes_targets_after_update():
+    model, params = _model_and_params("h2o-danube-1.8b")
+    specs = model.param_specs()
+    lparams = initialize(ad.lora_specs(specs, rank=4), jax.random.PRNGKey(1),
+                         "float32")
+    # nudge b away from zero
+    lparams = jax.tree_util.tree_map(lambda x: x + 0.01, lparams)
+    merged = ad.merge_lora(params, lparams)
+    diff = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(merged)))
+    assert diff > 0
+
+
+def test_ia3_identity_at_init():
+    model, params = _model_and_params("h2o-danube-1.8b")
+    specs = model.param_specs()
+    ispecs = ad.ia3_specs(specs)
+    assert ispecs
+    ip = initialize(ispecs, jax.random.PRNGKey(1), "float32")
+    merged = ad.merge_ia3(params, ip)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(merged)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_dora_identity_at_init_requires_unit_mag():
+    model, params = _model_and_params("h2o-danube-1.8b")
+    specs = model.param_specs()
+    lspecs = ad.lora_specs(specs, rank=4)
+    lparams = initialize(lspecs, jax.random.PRNGKey(1), "float32")
+    mspecs = ad.dora_mag_specs(specs)
+    # set magnitudes to the column norms of the base weights => identity
+    mags = {}
+    flat_params = {}
+
+    def record(path, w):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        flat_params[name] = w
+    jax.tree_util.tree_map_with_path(record, params)
+    for name in mspecs:
+        w = flat_params[name].astype(jnp.float32)
+        mags[name] = jnp.linalg.norm(w, axis=-2, keepdims=True)
+    merged = ad.merge_dora(params, {"lora": lparams, "mag": mags})
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(merged)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
