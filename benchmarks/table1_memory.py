@@ -102,11 +102,53 @@ def run(B=4, S=256):
     return rows
 
 
+def validate_estimator(B=4, S=256, tol=0.10):
+    """Cross-check repro.memory.estimator's static predictions against the
+    measured quantities of this benchmark: per-policy residual bytes must
+    match the concrete jax.vjp measurement within ``tol``, and optimizer
+    state exactly.  Returns [(label, predicted, measured, ok)]."""
+    from repro.memory import estimator as est_mod
+
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layers=4, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S),
+                                          0, cfg.vocab_size)}
+    rows = []
+    for label, sm in (("store", ["store"] * 4), ("remat", ["remat"] * 4),
+                      ("reversible", True), ("offload", ["offload"] * 4)):
+        predicted = est_mod.residual_bytes(model, B, S, save_memory=sm)
+        measured = _residual_bytes(
+            lambda p: model.loss(p, batch, save_memory=sm), params)
+        rows.append((f"residuals/{label}", predicted, measured,
+                     abs(predicted - measured) <= tol * measured))
+    opt = AdamW(lr=1e-4)
+    predicted = est_mod.array_bytes(
+        jax.eval_shape(opt.init, model.abstract_params()))
+    measured = _opt_state_bytes(opt.init(params))
+    rows.append(("opt_state/adamw", predicted, measured,
+                 predicted == measured))
+    live = est_mod.device_memory_stats()
+    if live is not None:  # TPU/GPU only; CPU allocator reports nothing
+        rows.append(("live/bytes_in_use", live.get("bytes_in_use", 0),
+                     live.get("peak_bytes_in_use", 0), True))
+    return rows
+
+
 def main():
     print("method,residual_MiB,opt_state_MiB,samples_per_s")
     for name, res, ost, tput in run():
         print(f"{name},{res:.1f},{ost:.1f},{tput:.2f}")
+    print("\nestimator validation (static prediction vs measured):")
+    bad = 0
+    for label, pred, meas, ok in validate_estimator():
+        bad += not ok
+        print(f"  {label:<20} predicted {pred / 2**20:9.2f} MiB  "
+              f"measured {meas / 2**20:9.2f} MiB  "
+              f"{'OK' if ok else 'MISMATCH'}")
+    return 1 if bad else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -67,6 +67,10 @@ class ModelConfig:
     inverse_fp_iters: int = 3      # paper uses 1; 3 reaches fp32 eps (see DESIGN.md)
     adapter_dim: Optional[int] = None  # d for P_up/P_down; None -> d_model
 
+    # memory planning (src/repro/memory): per-device HBM budget the planner
+    # fits the per-layer activation policies into.  None -> planner/CLI default.
+    hbm_budget_gb: Optional[float] = None
+
     # training
     dtype: str = "bfloat16"
     remat_policy: str = "none"     # for the SFT+checkpointing baseline

@@ -22,4 +22,5 @@ CONFIG = ModelConfig(
     d_ff_expert=1408,
     moe_period=1,           # every layer is MoE
     rope_theta=1_000_000.0,
+    hbm_budget_gb=80.0,     # paper scenario: full-param FT on one 80G device
 )

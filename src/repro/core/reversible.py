@@ -98,7 +98,8 @@ def _zeros_tangent(tree):
 
 
 def reversible_stack(block_fwd: Callable, block_inv: Callable, n_layers: int,
-                     save_memory=True, half_inv: Callable = None):
+                     save_memory=True, half_inv: Callable = None,
+                     idx_offset: int = 0):
     """Return apply(stacked_params, shared, ctx, x1, x2) -> (y1, y2).
 
     ``stacked_params``: pytree with leading dim n_layers (scanned).
@@ -118,7 +119,7 @@ def reversible_stack(block_fwd: Callable, block_inv: Callable, n_layers: int,
       False  — plain scan (XLA default AD, full caching): the SFT baseline.
     """
     from repro.core import settings
-    idxs = jnp.arange(n_layers, dtype=jnp.int32)
+    idxs = idx_offset + jnp.arange(n_layers, dtype=jnp.int32)
 
     def plain(stacked, shared, ctx, x1, x2):
         def body(carry, inp):
@@ -234,6 +235,78 @@ def _half_stack(block_fwd, half_inv, n_layers, plain, idxs):
         return dstacked, dsh, _zeros_tangent(ctx), d1, d2
 
     apply.defvjp(fwd_rule, bwd_rule)
+    return apply
+
+
+# ------------------------------------------------------ mixed-policy stacks
+
+POLICIES = ("store", "remat", "reversible", "offload")
+
+
+def policy_segments(policies):
+    """Group a per-layer policy list into contiguous (start, end, policy) runs."""
+    segs = []
+    for i, p in enumerate(policies):
+        assert p in POLICIES, f"unknown activation policy {p!r}"
+        if segs and segs[-1][2] == p:
+            segs[-1] = (segs[-1][0], i + 1, p)
+        else:
+            segs.append((i, i + 1, p))
+    return segs
+
+
+def mixed_policy_stack(block_fwd: Callable, block_inv: Callable, policies,
+                       half_inv: Callable = None):
+    """Per-layer activation-policy stack (memory-planner output; DESIGN.md §6).
+
+    ``policies``: one of ``POLICIES`` per layer.  Contiguous runs of the same
+    policy become one segment:
+
+      store       — plain scan, XLA default AD caches every intermediate.
+      remat       — scan with a ``jax.checkpoint``-ed body: only each layer's
+                    input streams persist; the rest recomputes in backward.
+      reversible  — the O(1)-activation custom_vjp (requires ``block_inv``).
+      offload     — per-layer ``jax.custom_vjp`` that parks the input streams
+                    in host memory and restores them for backward
+                    (repro.memory.offload).
+
+    Same signature as ``reversible_stack``'s apply:
+    (stacked_params, shared, ctx, x1, x2) -> (y1, y2).
+    """
+    from repro.core import settings
+    n_layers = len(policies)
+    segs = policy_segments(policies)
+    if any(p == "reversible" for p in policies):
+        assert block_inv is not None, "reversible policy needs block_inv"
+
+    def apply(stacked, shared, ctx, x1, x2):
+        from repro.memory.offload import offload_block
+        for start, end, pol in segs:
+            seg_params = jax.tree_util.tree_map(lambda a: a[start:end], stacked)
+            n = end - start
+            if pol == "reversible":
+                f = reversible_stack(block_fwd, block_inv, n, save_memory=True,
+                                     half_inv=half_inv, idx_offset=start)
+                x1, x2 = f(seg_params, shared, ctx, x1, x2)
+            elif pol in ("store", "remat"):
+                body_fn = block_fwd
+                if pol == "remat":
+                    body_fn = jax.checkpoint(block_fwd)
+                idxs = start + jnp.arange(n, dtype=jnp.int32)
+
+                def body(carry, inp, fn=body_fn):
+                    i, lp = inp
+                    return fn(lp, shared, ctx, i, *carry), None
+                (x1, x2), _ = jax.lax.scan(body, (x1, x2), (idxs, seg_params),
+                                           unroll=settings.SCAN_UNROLL)
+            else:                                       # offload
+                ob = offload_block(block_fwd)
+                for j in range(n):
+                    lp = jax.tree_util.tree_map(lambda a, j=j: a[j], seg_params)
+                    x1, x2 = ob(lp, shared, ctx,
+                                jnp.int32(start + j), x1, x2)
+        return x1, x2
+
     return apply
 
 

@@ -7,6 +7,15 @@ production meshes without allocating a single full-size weight.
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-moe-a2.7b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
 
+``plan`` mode runs the memory planner (repro.memory) instead of XLA lowering:
+
+  PYTHONPATH=src python -m repro.launch.dryrun plan --config qwen2_moe_a2_7b
+  PYTHONPATH=src python -m repro.launch.dryrun plan --all [--budget-gb 80] \
+      [--optimizer lomo] [--batch 8] [--seq 4096]
+
+printing the per-layer activation-policy table and the estimated device peak
+against the HBM budget for one or all configs.
+
 Everything is ShapeDtypeStructs: parameters via Model.abstract_params(),
 decode caches via jax.eval_shape(Model.init_cache).  ``compile()`` succeeding
 proves the sharding config is coherent (no mismatched collectives, fits
@@ -15,6 +24,7 @@ per-device HBM); memory_analysis/cost_analysis feed EXPERIMENTS.md §Roofline.
 import argparse
 import json
 import re
+import sys
 import time
 from typing import Optional
 
@@ -114,7 +124,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
               "kind": shape.kind}
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with shd.use_mesh(mesh):
         if shape.kind == "train":
             opt = AdamW(lr=1e-5)
             aopt = jax.eval_shape(opt.init, aparams)
@@ -126,8 +136,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
             step = make_train_step(model, opt, n_micro=nm)
             jitted = jax.jit(
                 step,
-                in_shardings=(pspecs, opt_pspecs, bspecs),
-                out_shardings=(pspecs, opt_pspecs, None),
+                in_shardings=shd.jit_shardings((pspecs, opt_pspecs, bspecs), mesh),
+                out_shardings=shd.jit_shardings((pspecs, opt_pspecs, None), mesh),
                 donate_argnums=(0, 1))
             lowered = jitted.lower(aparams, aopt, batch)
         else:
@@ -159,8 +169,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
 
             jitted = jax.jit(
                 serve_step,
-                in_shardings=(pspecs, cspecs, tspec),
-                out_shardings=(None, cspecs),
+                in_shardings=shd.jit_shardings((pspecs, cspecs, tspec), mesh),
+                out_shardings=shd.jit_shardings((None, cspecs), mesh),
                 donate_argnums=(1,))
             lowered = jitted.lower(aparams, acache, tok)
 
@@ -179,6 +189,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
             if v is not None:
                 result[attr] = int(v)
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):        # older JAX: one dict per program
+        cost = cost[0] if cost else None
     if cost:
         result["flops"] = float(cost.get("flops", 0.0))
         result["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
@@ -186,7 +198,61 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
     return result, lowered, compiled
 
 
+def _resolve_arch(name: str) -> str:
+    """Accept both the arch id ("qwen2-moe-a2.7b") and its config module
+    spelling ("qwen2_moe_a2_7b")."""
+    from repro.configs.base import _MODULE_FOR
+    if name in ARCHS:
+        return name
+    for arch, module in _MODULE_FOR.items():
+        if name == module:
+            return arch
+    raise SystemExit(f"unknown config {name!r}; known: {', '.join(ARCHS)}")
+
+
+def plan_main(argv):
+    """`dryrun plan`: print planner budget tables — no XLA lowering at all."""
+    from repro.memory.planner import plan
+    ap = argparse.ArgumentParser(prog="dryrun plan")
+    ap.add_argument("--config", "--arch", dest="arch", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--budget-gb", type=float, default=None,
+                    help="override ModelConfig.hbm_budget_gb / the 80G default")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="per-device microbatch")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--optimizer", default="lomo",
+                    choices=["adamw", "lomo", "galore"],
+                    help="lomo (default) is the paper's single-device "
+                         "scenario: fused update, no optimizer state; "
+                         "adamw shows the full m/v-state floor instead")
+    ap.add_argument("--reduced", action="store_true",
+                    help="plan the smoke-scale configs (CPU tests)")
+    args = ap.parse_args(argv)
+
+    archs = ARCHS if args.all else [_resolve_arch(args.arch or "qwen2-moe-a2.7b")]
+    unfit = []
+    for arch in archs:
+        cfg = get_config(arch, reduced=args.reduced)
+        try:
+            p = plan(cfg, budget_gb=args.budget_gb, batch=args.batch,
+                     seq=args.seq, optimizer=args.optimizer)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"[FAIL] {arch}: {type(e).__name__}: {str(e)[:300]}",
+                  flush=True)
+            unfit.append(arch)
+            continue
+        print(p.report(), flush=True)
+        print()
+        if not p.fits:
+            unfit.append(arch)
+    print(f"{len(archs) - len(unfit)}/{len(archs)} configs fit their budget")
+    return 1 if unfit else 0
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "plan":
+        return plan_main(sys.argv[2:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

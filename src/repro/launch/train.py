@@ -30,6 +30,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--compress", action="store_true",
                     help="int8 gradient compression before reduction")
+    ap.add_argument("--hbm-budget-gb", type=float, default=None,
+                    help="fit per-layer activation policies into this budget "
+                         "(repro.memory planner); default: config/80 GiB")
+    ap.add_argument("--plan", action="store_true",
+                    help="run the memory planner even without an explicit "
+                         "--hbm-budget-gb")
     args = ap.parse_args()
 
     import jax
@@ -57,7 +63,16 @@ def main():
     rc = RunConfig(total_steps=args.steps, stage1_steps=args.stage1,
                    ckpt_every=max(args.steps // 5, 1), ckpt_dir=args.ckpt_dir,
                    log_every=10, n_micro=args.n_micro)
-    _, _, losses = train(model, opt, dc, rc)
+    memory_plan = None
+    if args.plan or args.hbm_budget_gb is not None:
+        from repro.memory.planner import plan as make_plan
+        # per-device microbatch: the pipeline shards the global batch across
+        # hosts, then grad accumulation splits each host's share by n_micro
+        per_dev = max(args.batch // (jax.process_count() * args.n_micro), 1)
+        memory_plan = make_plan(cfg, budget_gb=args.hbm_budget_gb,
+                                batch=per_dev,
+                                seq=args.seq, optimizer=args.optimizer)
+    _, _, losses = train(model, opt, dc, rc, plan=memory_plan)
     print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
 
 

@@ -1,0 +1,22 @@
+"""Memory planner subsystem (DESIGN.md §6).
+
+``estimator``  — static per-layer byte model (params / optimizer state /
+                 activations under each policy), derived by evaluating
+                 ``jax.vjp`` under ``jax.eval_shape`` so full-size configs
+                 cost nothing to analyse.
+``planner``    — greedy HBM-budget fitting: per-unit policy assignment
+                 (store -> reversible/remat -> offload) + plan report.
+``offload``    — ``jax.custom_vjp`` wrappers parking activation residuals in
+                 host memory between forward and backward.
+"""
+from repro.memory.estimator import (MemoryEstimate, POLICIES, array_bytes,
+                                    device_memory_stats, estimate,
+                                    residual_bytes)
+from repro.memory.offload import offload_block, offload_std_block
+from repro.memory.planner import MemoryPlan, plan
+
+__all__ = [
+    "MemoryEstimate", "MemoryPlan", "POLICIES", "array_bytes",
+    "device_memory_stats", "estimate", "offload_block", "offload_std_block",
+    "plan", "residual_bytes",
+]

@@ -1,0 +1,207 @@
+"""Static per-layer memory model for the activation-policy planner.
+
+Everything here is computed WITHOUT allocating or running anything, so the
+full-size configs are estimable on this CPU container:
+
+  * parameter / optimizer-state bytes come from the declarative param specs
+    (``Model.abstract_params`` + ``jax.eval_shape(opt.init, ...)``) — exact.
+  * residual (activation) bytes come from evaluating ``jax.vjp`` of the model
+    loss **under** ``jax.eval_shape``: the leaves of the returned vjp closure
+    are exactly the arrays autodiff saves for backward, and eval_shape gives
+    their ShapeDtypeStructs with zero FLOPs.  This is the same trace-level
+    quantity ``benchmarks/table1_memory.py`` measures concretely.
+  * per-layer-per-policy costs are derived by depth differencing: trace a
+    1-unit and a 2-unit model under the policy and subtract (net of the
+    stacked-parameter growth, which is known exactly from the specs).
+
+The resulting ``MemoryEstimate`` is the planner's cost model; its totals are
+cross-checkable against live ``jax.local_devices()[0].memory_stats()`` via
+``device_memory_stats`` (TPU/GPU; the CPU backend reports nothing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+GiB = 2**30
+
+#: planner-facing policy names, cheapest-compute first (single source of
+#: truth lives next to the mixed-policy stack implementation)
+from repro.core.reversible import POLICIES  # noqa: E402
+
+
+def array_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays or ShapeDtypeStructs."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def abstract_batch(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStruct batch matching what ``Model.loss`` consumes."""
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        out["enc_feats"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        out["img"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+def residual_bytes(model, batch: int, seq: int, save_memory=True) -> int:
+    """Trace-level bytes autodiff saves for backward of ``model.loss`` —
+    computed statically (eval_shape; nothing is allocated).  ``save_memory``
+    takes the same values as ``Model.loss``: True / "half" / False / a
+    per-layer policy list."""
+    abatch = abstract_batch(model.cfg, batch, seq)
+
+    def residuals(params, b):
+        _, vjp_fn = jax.vjp(lambda p: model.loss(p, b, save_memory=save_memory),
+                            params)
+        return tuple(leaf for leaf in jax.tree_util.tree_leaves(vjp_fn)
+                     if hasattr(leaf, "shape"))
+
+    out = jax.eval_shape(residuals, model.abstract_params(), abatch)
+    return array_bytes(out)
+
+
+def optimizer_by_name(name: str, lr: float = 1e-5):
+    from repro.optim.adamw import AdamW
+    from repro.optim.galore import GaLore
+    from repro.optim.lomo import LoMo
+    return {"adamw": AdamW(lr=lr), "lomo": LoMo(lr=lr),
+            "galore": GaLore(lr=lr)}[name]
+
+
+def unit_layers_for(cfg: ModelConfig) -> int:
+    """Model layers per plannable (scanned) unit."""
+    if cfg.family == "hybrid" and cfg.attn_period:
+        return cfg.attn_period
+    if cfg.family == "vlm" and cfg.cross_attn_period:
+        return cfg.cross_attn_period
+    return 1
+
+
+def n_plan_units(model) -> int:
+    """Plannable units = total scanned length of the main stacks."""
+    return sum(s.n for s in model.stacks if s.role == "main")
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryEstimate:
+    """Byte-level cost model for one (config, microbatch, seq, optimizer)."""
+    arch: str
+    family: str
+    batch: int
+    seq: int
+    optimizer: str
+    n_units: int
+    unit_layers: int
+    param_bytes: int
+    grad_bytes: int
+    opt_bytes: int
+    # depth-independent residuals (embed/head/loss) are NOT policy-free:
+    # e.g. the store path keeps final hidden states the reversible path
+    # reconstructs — so they are tracked per policy.
+    fixed_act_by_policy: Dict[str, int]
+    unit_act_bytes: Dict[str, int]       # per-policy DEVICE bytes per unit
+    unit_host_bytes: Dict[str, int]      # per-policy HOST bytes per unit
+
+    def fixed_act_for(self, policies: Sequence[str]) -> int:
+        """Depth-free activation residuals of a mixed plan: the heaviest
+        policy present dominates (its segment keeps those residuals)."""
+        return max(self.fixed_act_by_policy[p] for p in set(policies))
+
+    @property
+    def fixed_act_bytes(self) -> int:
+        return max(self.fixed_act_by_policy.values())
+
+    def device_total(self, policies: Sequence[str]) -> int:
+        assert len(policies) == self.n_units, (len(policies), self.n_units)
+        return (self.param_bytes + self.grad_bytes + self.opt_bytes
+                + self.fixed_act_for(policies)
+                + sum(self.unit_act_bytes[p] for p in policies))
+
+    def host_total(self, policies: Sequence[str]) -> int:
+        return sum(self.unit_host_bytes[p] for p in policies)
+
+
+def _model_for(cfg: ModelConfig, n_units: int):
+    from repro.models.model import Model
+    return Model(cfg.replace(num_layers=n_units * unit_layers_for(cfg)))
+
+
+def estimate(cfg: ModelConfig, batch: int, seq: int,
+             optimizer: str = "adamw",
+             policies: Sequence[str] = POLICIES) -> MemoryEstimate:
+    """Build the per-layer cost model for ``cfg`` at microbatch (batch, seq)."""
+    from repro.models.model import Model
+
+    model = Model(cfg)
+    aparams = model.abstract_params()
+    param_bytes = array_bytes(aparams)
+    n_params = sum(leaf.size for leaf in jax.tree_util.tree_leaves(aparams))
+
+    opt = optimizer_by_name(optimizer)
+    opt_bytes = array_bytes(jax.eval_shape(opt.init, aparams))
+    # LoMo's fused/donated update reuses one param-sized buffer; AdamW/GaLore
+    # cast the full gradient tree to f32 before the moment update.
+    grad_bytes = param_bytes if optimizer == "lomo" else 4 * n_params
+
+    # host bytes for an offloaded unit: its input streams (x1 + x2 = d_model
+    # per token) for each model layer in the unit.
+    act_itemsize = jnp.dtype(cfg.dtype).itemsize
+    k = unit_layers_for(cfg)
+    host_unit = batch * seq * cfg.d_model * act_itemsize * k
+
+    # the standard (non-reversible) path has no inverse to exploit
+    policies = [p for p in policies if p != "reversible" or cfg.reversible]
+
+    m1, m2 = _model_for(cfg, 1), _model_for(cfg, 2)
+    p1, p2 = array_bytes(m1.abstract_params()), array_bytes(m2.abstract_params())
+
+    if "store" not in policies:
+        policies = tuple(policies) + ("store",)
+
+    unit_act: Dict[str, int] = {}
+    unit_host: Dict[str, int] = {}
+    fixed_act: Dict[str, int] = {}
+    for pol in policies:
+        r1 = residual_bytes(m1, batch, seq, save_memory=[pol] * n_plan_units(m1))
+        r2 = residual_bytes(m2, batch, seq, save_memory=[pol] * n_plan_units(m2))
+        per_unit = max(r2 - r1 - (p2 - p1), 0)
+        fixed_act[pol] = max(r1 - per_unit * n_plan_units(m1) - p1, 0)
+        if pol == "offload":
+            unit_host[pol] = min(host_unit, per_unit)
+            per_unit -= unit_host[pol]
+        else:
+            unit_host[pol] = 0
+        unit_act[pol] = per_unit
+
+    return MemoryEstimate(
+        arch=cfg.name, family=cfg.family, batch=batch, seq=seq,
+        optimizer=optimizer, n_units=n_plan_units(model), unit_layers=k,
+        param_bytes=param_bytes, grad_bytes=grad_bytes, opt_bytes=opt_bytes,
+        fixed_act_by_policy=fixed_act, unit_act_bytes=unit_act,
+        unit_host_bytes=unit_host)
+
+
+def device_memory_stats() -> Optional[dict]:
+    """Live allocator stats of device 0 (None on backends without them, e.g.
+    CPU) — the runtime cross-check for the static estimates."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:  # noqa: BLE001
+        return None
+    if not stats:
+        return None
+    keep = ("bytes_in_use", "peak_bytes_in_use", "bytes_limit")
+    return {key: stats[key] for key in keep if key in stats}

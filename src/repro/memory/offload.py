@@ -1,0 +1,130 @@
+"""Activation offload to host memory via ``jax.custom_vjp``.
+
+``offload_block(block_fwd)`` wraps one reversible-layer forward so that the
+only large residuals autodiff keeps — the block's input streams — are parked
+in host memory (``jax.device_put`` to the device's host memory space, which
+stays inside ``jit``) and transferred back just-in-time for that layer's
+backward.  Device-side residency for an offloaded layer is therefore O(1):
+the streams live in HBM only while the layer itself is being differentiated.
+
+Backend handling: TPU/GPU expose a distinct ``pinned_host`` memory space next
+to device HBM; the CPU backend has only ``unpinned_host`` (its default), so
+there is nothing to offload *to* and the transfer degrades to identity.
+Gradients are bit-identical either way — the memory kind only changes where
+the bytes wait between forward and backward.  (An ``io_callback`` round-trip
+would also work on backends without memory spaces, but it pins a host-python
+dependency into the compiled step; memory-kind ``device_put`` is the
+jit-native mechanism.)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reversible import _zeros_tangent
+
+try:  # public in newer JAX; private-but-stable path in older releases
+    from jax.sharding import TransferToMemoryKind  # type: ignore
+except ImportError:
+    try:
+        from jax._src.sharding_impls import TransferToMemoryKind
+    except ImportError:  # very old JAX: no memory spaces at all
+        TransferToMemoryKind = None
+
+
+def host_memory_kind() -> Optional[str]:
+    """The device's distinct host memory kind, or None when offload would be
+    a no-op (CPU backend, or a JAX without memory-space support)."""
+    if TransferToMemoryKind is None:
+        return None
+    dev = jax.local_devices()[0]
+    try:
+        kinds = [m.kind for m in dev.addressable_memories()]
+        default = dev.default_memory().kind
+    except Exception:  # noqa: BLE001 — backend without memories API
+        return None
+    for kind in ("pinned_host", "unpinned_host"):
+        if kind in kinds and kind != default:
+            return kind
+    return None
+
+
+def device_memory_kind() -> Optional[str]:
+    try:
+        return jax.local_devices()[0].default_memory().kind
+    except Exception:  # noqa: BLE001
+        return None
+
+
+def _put(tree, kind: Optional[str]):
+    if kind is None or TransferToMemoryKind is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, TransferToMemoryKind(kind)), tree)
+
+
+def to_host(tree):
+    """Park a pytree of arrays in host memory (identity on CPU backend)."""
+    return _put(tree, host_memory_kind())
+
+
+def to_device(tree):
+    """Bring a host-parked pytree back into device memory."""
+    if host_memory_kind() is None:
+        return tree
+    return _put(tree, device_memory_kind())
+
+
+def offload_block(block_fwd: Callable):
+    """Two-stream layer wrapper: forward output is unchanged; the residuals
+    saved for backward are the input streams, parked on host.
+
+    ``block_fwd(lp, shared, ctx, i, x1, x2) -> (y1, y2)``; ``i`` must be a
+    jnp int scalar (it rides through the custom_vjp residuals).
+    """
+
+    @jax.custom_vjp
+    def apply(lp, shared, ctx, i, x1, x2):
+        return block_fwd(lp, shared, ctx, i, x1, x2)
+
+    def fwd_rule(lp, shared, ctx, i, x1, x2):
+        y1, y2 = block_fwd(lp, shared, ctx, i, x1, x2)
+        return (y1, y2), (lp, shared, ctx, i, to_host((x1, x2)))
+
+    def bwd_rule(res, cts):
+        lp, shared, ctx, i, hosted = res
+        x1, x2 = to_device(hosted)
+        _, vjp = jax.vjp(
+            lambda lp_, sh_, a, b: block_fwd(lp_, sh_, ctx, i, a, b),
+            lp, shared, x1, x2)
+        dlp, dsh, d1, d2 = vjp(cts)
+        return dlp, dsh, _zeros_tangent(ctx), _zeros_tangent(i), d1, d2
+
+    apply.defvjp(fwd_rule, bwd_rule)
+    return apply
+
+
+def offload_std_block(block_fwd: Callable):
+    """Single-stream variant for the standard (non-reversible) residual path:
+    ``block_fwd(lp, shared, ctx, i, h) -> h``."""
+
+    @jax.custom_vjp
+    def apply(lp, shared, ctx, i, h):
+        return block_fwd(lp, shared, ctx, i, h)
+
+    def fwd_rule(lp, shared, ctx, i, h):
+        y = block_fwd(lp, shared, ctx, i, h)
+        return y, (lp, shared, ctx, i, to_host(h))
+
+    def bwd_rule(res, ct):
+        lp, shared, ctx, i, hosted = res
+        h = to_device(hosted)
+        _, vjp = jax.vjp(
+            lambda lp_, sh_, a: block_fwd(lp_, sh_, ctx, i, a), lp, shared, h)
+        dlp, dsh, dh = vjp(ct)
+        return dlp, dsh, _zeros_tangent(ctx), _zeros_tangent(i), dh
+
+    apply.defvjp(fwd_rule, bwd_rule)
+    return apply

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import adapters as ad
 from repro.core.reversible import (chain, coupling, make_coupled, merge_streams,
-                                   reversible_stack, split_streams)
+                                   mixed_policy_stack, reversible_stack,
+                                   split_streams)
 from repro.models import common, moe as moe_lib, spec, ssm as ssm_lib
 from repro.models.common import (attention, attention_decode, attn_specs,
                                  cross_attention_decode, cross_kv,
@@ -635,8 +636,39 @@ class Model:
                 x, self.batch_spec if x.ndim == 3 else self.batch_spec)
         return x
 
+    def _std_mixed(self, s, stacked, shared, ctx, h, policies):
+        """Mixed activation policies on the standard (non-reversible) path.
+        "reversible" is not available here — the planner never emits it for
+        ``reversible=False`` configs."""
+        from repro.core.reversible import policy_segments
+        assert "reversible" not in policies, \
+            "reversible policy requires cfg.reversible=True"
+        for start, end, pol in policy_segments(policies):
+            seg_params = jax.tree_util.tree_map(lambda a: a[start:end], stacked)
+            if pol == "offload":
+                from repro.memory.offload import offload_std_block
+                ob = offload_std_block(s.std_fwd)
+                for j in range(end - start):
+                    lp = jax.tree_util.tree_map(lambda a, j=j: a[j], seg_params)
+                    h = ob(lp, shared, ctx, jnp.int32(start + j), h)
+                continue
+            body_fn = s.std_fwd if pol == "store" else jax.checkpoint(s.std_fwd)
+
+            def scan_body(hh, inp, fn=body_fn, sh=shared):
+                i, lp = inp
+                return fn(lp, sh, ctx, i, hh), None
+            idxs = start + jnp.arange(end - start, dtype=jnp.int32)
+            h, _ = jax.lax.scan(scan_body, h, (idxs, seg_params))
+        return h
+
     def hidden(self, params, tokens, extras=None, save_memory=True):
-        """Final-normed hidden states (B,S,d) — everything before the LM head."""
+        """Final-normed hidden states (B,S,d) — everything before the LM head.
+
+        ``save_memory``: True (paper O(1) mode) / "half" / False (cached SFT
+        baseline), or a per-layer policy list ("store" | "remat" |
+        "reversible" | "offload", one per main-stack unit) as produced by
+        ``repro.memory.planner`` — mixed policies per DESIGN.md §6.
+        """
         cfg = self.cfg
         B, S = tokens.shape
         h = jnp.take(params["embed"], tokens, axis=0)
@@ -645,14 +677,24 @@ class Model:
         ctx = {"positions": positions}
         shared = self._shared(params, extras)
 
+        policy_list = (list(save_memory)
+                       if isinstance(save_memory, (list, tuple)) else None)
+        if policy_list is not None:
+            n_main = sum(s.n for s in self.stacks if s.role == "main")
+            assert len(policy_list) == n_main, (
+                f"plan has {len(policy_list)} policies for {n_main} units")
+
         if cfg.family == "encdec":
             enc = extras["enc_feats"]
             e1, e2 = split_streams(enc.astype(h.dtype))
             ectx = {"positions": jnp.broadcast_to(
                 jnp.arange(enc.shape[1], dtype=jnp.int32)[None], enc.shape[:2])}
             enc_stack = next(s for s in self.stacks if s.role == "encoder")
+            # plans cover the main stacks only; the encoder keeps the default
+            # O(1) reversible mode under a policy list
+            enc_sm = True if policy_list is not None else save_memory
             apply_e = reversible_stack(enc_stack.fwd, enc_stack.inv, enc_stack.n,
-                                       save_memory=save_memory)
+                                       save_memory=enc_sm)
             e1, e2 = apply_e(params["stacks"][enc_stack.name], shared, ectx, e1, e2)
             enc_out = rms_norm(merge_streams(e1, e2), params["enc_norm"], cfg.norm_eps)
             shared = dict(shared)
@@ -663,11 +705,16 @@ class Model:
             for s in self.stacks:
                 if s.role != "main":
                     continue
-                sm = save_memory
-                if sm == "half" and s.half_inv is None:
-                    sm = True                      # fall back to full inversion
-                apply = reversible_stack(s.fwd, s.inv, s.n, save_memory=sm,
-                                         half_inv=s.half_inv)
+                if policy_list is not None:
+                    seg, policy_list = policy_list[:s.n], policy_list[s.n:]
+                    apply = mixed_policy_stack(s.fwd, s.inv, seg,
+                                               half_inv=s.half_inv)
+                else:
+                    sm = save_memory
+                    if sm == "half" and s.half_inv is None:
+                        sm = True                  # fall back to full inversion
+                    apply = reversible_stack(s.fwd, s.inv, s.n, save_memory=sm,
+                                             half_inv=s.half_inv)
                 x1, x2 = apply(params["stacks"][s.name], shared, ctx, x1, x2)
             h = merge_streams(x1, x2)
         else:
@@ -677,6 +724,11 @@ class Model:
                     continue
                 body_fn = s.std_fwd
                 assert body_fn is not None, f"standard path unsupported for {cfg.family}"
+                if policy_list is not None:
+                    seg, policy_list = policy_list[:s.n], policy_list[s.n:]
+                    h = self._std_mixed(s, params["stacks"][s.name], shared,
+                                        ctx, h, seg)
+                    continue
                 if use_remat:
                     body_fn = jax.checkpoint(body_fn, static_argnums=())
 
@@ -722,7 +774,12 @@ class Model:
             nc = S // ck
             hs = h.reshape(B, nc, ck, -1).transpose(1, 0, 2, 3)
             ts = tgt.reshape(B, nc, ck).transpose(1, 0, 2)
-            nll = jax.lax.map(lambda ab: self._nll(params, ab[0], ab[1]), (hs, ts))
+            # checkpoint the chunk body: without it autodiff stacks each
+            # chunk's f32 logits as residuals — the full (B,S,vocab) the
+            # chunking exists to avoid (estimator made this visible, §6)
+            nll = jax.lax.map(
+                jax.checkpoint(lambda ab: self._nll(params, ab[0], ab[1])),
+                (hs, ts))
             nll = nll.transpose(1, 0, 2).reshape(B, S)
         else:
             nll = self._nll(params, h, tgt)

@@ -36,9 +36,17 @@ class RunConfig:
 
 def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
           params=None, log_fn: Callable = print,
-          fail_at_step: Optional[int] = None):
+          fail_at_step: Optional[int] = None, plan=None):
     """Runs (or resumes) a two-stage fine-tune.  ``fail_at_step`` simulates a
-    preemption (raises) for the fault-tolerance tests."""
+    preemption (raises) for the fault-tolerance tests.  ``plan`` is an
+    optional ``repro.memory.planner.MemoryPlan`` (or a raw per-layer policy
+    list): the step then runs the planned mixed activation policies instead
+    of the all-reversible default."""
+    save_memory = True
+    if plan is not None:
+        save_memory = list(getattr(plan, "policies", plan))
+        if hasattr(plan, "report"):
+            log_fn(plan.report())
     key = jax.random.PRNGKey(0)
     if params is None:
         params = model.init(key)
@@ -52,9 +60,11 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
         log_fn(f"[driver] resumed from step {start_step}")
 
     step1 = make_train_step(model, optimizer, n_micro=run.n_micro,
-                            mask_fn=schedule.stage1_mask)
+                            mask_fn=schedule.stage1_mask,
+                            save_memory=save_memory)
     step2 = make_train_step(model, optimizer, n_micro=run.n_micro,
-                            mask_fn=schedule.stage2_mask)
+                            mask_fn=schedule.stage2_mask,
+                            save_memory=save_memory)
     step1 = jax.jit(step1, donate_argnums=(0, 1))
     step2 = jax.jit(step2, donate_argnums=(0, 1))
 

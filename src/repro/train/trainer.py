@@ -15,12 +15,14 @@ from repro.optim.adamw import global_norm
 def make_train_step(model, optimizer, *, n_micro: int = 1,
                     mask_fn: Optional[Callable] = None,
                     compress: Optional[Callable] = None,
-                    save_memory: bool = True):
+                    save_memory=True):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
     batch leaves have leading dim global_batch; grad accumulation splits it
     into ``n_micro`` slices scanned sequentially (activation memory = one
-    microbatch)."""
+    microbatch).  ``save_memory`` is forwarded to ``model.loss`` — True /
+    "half" / False, or a per-layer activation-policy list from the memory
+    planner (repro.memory)."""
 
     def loss_fn(params, mbatch):
         return model.loss(params, mbatch, save_memory=save_memory)

@@ -1,0 +1,64 @@
+"""Optional-``hypothesis`` shim for property-based tests.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``strategies``
+are re-exported unchanged.  In minimal environments (this container) we fall
+back to a deterministic stand-in: each strategy carries a short list of fixed
+example values and ``given`` becomes a ``pytest.mark.parametrize`` over (a
+bounded slice of) their cartesian product.  Tests keep their property-based
+shape and still run as deterministic example-based cases.
+"""
+from __future__ import annotations
+
+import itertools
+
+import pytest
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Fixed example list standing in for a hypothesis strategy."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _St:
+        @staticmethod
+        def sampled_from(xs):
+            xs = list(xs)
+            return _Strategy(xs[:2] if len(xs) > 2 else xs)
+
+        @staticmethod
+        def integers(min_value=0, max_value=0):
+            return _Strategy([min_value, (min_value + max_value) // 2,
+                              max_value])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy([min_value, 0.5 * (min_value + max_value)])
+
+    st = _St()
+
+    def settings(**_kw):                       # noqa: D401 — decorator factory
+        """No-op replacement for hypothesis.settings."""
+        def deco(fn):
+            return fn
+        return deco
+
+    _MAX_CASES = 6
+
+    def given(**strategies):
+        names = sorted(strategies)
+        combos = list(itertools.islice(
+            itertools.product(*(strategies[n].examples for n in names)),
+            _MAX_CASES))
+        if len(names) == 1:                    # parametrize wants scalars here
+            combos = [c[0] for c in combos]
+
+        def deco(fn):
+            return pytest.mark.parametrize(",".join(names), combos)(fn)
+        return deco

@@ -84,7 +84,8 @@ def test_elastic_remesh_roundtrip():
     mesh_b = jax.make_mesh((1, 1), ("data", "model"))
     p2, st2, pspecs = elastic_remesh(params, st, model, mesh_a, mesh_b)
     batch = {"tokens": jnp.zeros((2, 32), jnp.int32)}
-    with jax.set_mesh(mesh_b):
+    from repro.distributed import sharding as shd
+    with shd.use_mesh(mesh_b):
         loss = model.loss(p2, batch)
     assert bool(jnp.isfinite(loss))
 
