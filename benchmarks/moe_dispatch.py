@@ -1,0 +1,141 @@
+"""MoE dispatch benchmark: dense one-hot einsum vs sort-based grouped GEMM.
+
+Three measurements per MoE config, written to BENCH_moe_dispatch.json:
+
+  * analytic dispatch cost at the FULL config and the train_4k microbatch
+    (repro.memory.estimator.moe_dispatch_cost) — the FLOPs/bytes story the
+    grouped path exists for; nothing is allocated.
+  * reduced-mode wall clock of one jitted MoE layer, forward and
+    forward+grad, per backend (this CPU container; Pallas runs the pure-JAX
+    fallback here, so treat the times as dispatch-overhead ratios, not TPU
+    throughput).
+  * numerics parity between the backends under capacity headroom
+    (capacity_factor=16 so the einsum path drops nothing), plus the
+    trace-level backward residual bytes of each.
+
+    PYTHONPATH=src python benchmarks/moe_dispatch.py [--quick] \
+        [--out BENCH_moe_dispatch.json] [--batch 4] [--seq 256]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCHS, get_config
+from repro.memory.estimator import moe_dispatch_cost
+from repro.models import moe as moe_lib
+from repro.models.spec import initialize
+
+MOE_ARCHS = [a for a in ARCHS if get_config(a).family == "moe"]
+
+
+def _layer(cfg, key):
+    return initialize(moe_lib.moe_specs(cfg), key, "float32")
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)                     # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _residual_bytes(fn, p):
+    # concrete arrays, deduped by identity: a buffer shared by several
+    # custom_vjp residuals (e.g. the sorted activations feeding both the
+    # w_gate and w_up GEMMs) is resident once, not once per reference
+    _, vjp_fn = jax.vjp(fn, p)
+    leaves = {id(x): x for x in jax.tree_util.tree_leaves(vjp_fn)
+              if hasattr(x, "size")}
+    return sum(x.size * x.dtype.itemsize for x in leaves.values())
+
+
+def bench_arch(arch: str, batch: int, seq: int, iters: int) -> dict:
+    full = get_config(arch)
+    row = {"arch": arch, "reduced_shape": [batch, seq],
+           "full_analytic_train4k": {}}
+    for backend in moe_lib.MOE_BACKENDS:
+        # full-size analytic cost at the dryrun plan default microbatch
+        row["full_analytic_train4k"][backend] = moe_dispatch_cost(
+            full, batch=8, seq=4096, backend=backend)
+
+    cfg = get_config(arch, reduced=True).replace(capacity_factor=16.0)
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (batch, seq, cfg.d_model)) * 0.5
+
+    outs, row["reduced"] = {}, {}
+    for backend in moe_lib.MOE_BACKENDS:
+        fwd = jax.jit(lambda p, x, b=backend:
+                      moe_lib.moe_apply(p, cfg, x, backend=b)[0])
+        grad = jax.jit(jax.grad(lambda p, x, b=backend: jnp.sum(
+            jnp.square(moe_lib.moe_apply(p, cfg, x, backend=b)[0]))))
+        outs[backend] = fwd(p, x)
+        row["reduced"][backend] = {
+            "fwd_s": _time(fwd, p, x, iters=iters),
+            "grad_s": _time(grad, p, x, iters=iters),
+            "residual_bytes": _residual_bytes(
+                lambda q, b=backend: jnp.sum(
+                    moe_lib.moe_apply(q, cfg, x, backend=b)[0]), p),
+        }
+    row["parity_max_abs_err"] = float(jnp.max(jnp.abs(
+        outs["grouped"] - outs["einsum"])))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_moe_dispatch.json")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing iterations (CI)")
+    args = ap.parse_args()
+
+    results = []
+    for arch in MOE_ARCHS:
+        row = bench_arch(arch, args.batch, args.seq,
+                         iters=2 if args.quick else 5)
+        results.append(row)
+        an = row["full_analytic_train4k"]
+        red = row["reduced"]
+        print(f"[{arch}] full train_4k dispatch/layer: "
+              f"einsum {an['einsum']['dispatch_flops']:.3e} FLOPs "
+              f"{an['einsum']['dispatch_bytes'] / 2**30:.2f} GiB | "
+              f"grouped {an['grouped']['dispatch_flops']:.3e} FLOPs "
+              f"{an['grouped']['dispatch_bytes'] / 2**30:.2f} GiB")
+        print(f"  reduced {args.batch}x{args.seq}: "
+              f"fwd {red['einsum']['fwd_s'] * 1e3:.1f} -> "
+              f"{red['grouped']['fwd_s'] * 1e3:.1f} ms  "
+              f"grad {red['einsum']['grad_s'] * 1e3:.1f} -> "
+              f"{red['grouped']['grad_s'] * 1e3:.1f} ms  "
+              f"residuals {red['einsum']['residual_bytes'] / 2**20:.2f} -> "
+              f"{red['grouped']['residual_bytes'] / 2**20:.2f} MiB  "
+              f"parity {row['parity_max_abs_err']:.2e}", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+    bad = 0
+    for row in results:
+        an = row["full_analytic_train4k"]
+        ok = (an["grouped"]["dispatch_flops"] < an["einsum"]["dispatch_flops"]
+              and an["grouped"]["dispatch_bytes"] < an["einsum"]["dispatch_bytes"]
+              and row["parity_max_abs_err"] < 1e-4)
+        if not ok:
+            print(f"[FAIL] {row['arch']}: grouped not strictly cheaper "
+                  f"or parity broken")
+            bad += 1
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

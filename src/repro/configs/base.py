@@ -45,6 +45,9 @@ class ModelConfig:
     moe_period: int = 1            # a layer is MoE iff (layer % moe_period == moe_period-1)
     capacity_factor: float = 1.25
     router_aux_coef: float = 0.001
+    moe_backend: str = "einsum"    # "einsum" (dense one-hot dispatch, capacity
+                                   # drops) | "grouped" (sort-based dropless
+                                   # grouped GEMM, repro.kernels.moe)
 
     # SSM / hybrid
     ssm_state: int = 0             # mamba2 state size

@@ -1,0 +1,19 @@
+"""Grouped-GEMM MoE dispatch subsystem (DESIGN.md §7).
+
+Sort-based dropless expert execution: router top-k -> stable argsort token
+permutation -> per-expert ragged grouped GEMM (Pallas on TPU, pure-JAX
+tiled reference as the CPU/interpret fallback) -> gate-weighted combine.
+Selected per config via ``ModelConfig.moe_backend = "grouped"``; the
+legacy dense one-hot dispatch einsum remains ``"einsum"``.
+"""
+from repro.kernels.moe.dispatch import DispatchPlan, combine, make_plan, permute
+from repro.kernels.moe.grouped_gemm import grouped_matmul_pallas
+from repro.kernels.moe.ops import (default_block_m, default_impl,
+                                   grouped_expert_ffn, grouped_matmul)
+from repro.kernels.moe.ref import grouped_matmul_ref
+
+__all__ = [
+    "DispatchPlan", "combine", "make_plan", "permute",
+    "grouped_matmul_pallas", "grouped_matmul_ref", "grouped_matmul",
+    "grouped_expert_ffn", "default_block_m", "default_impl",
+]

@@ -1,0 +1,111 @@
+"""Sort-based dropless token dispatch for MoE (the MegaBlocks pattern).
+
+Replaces the dense one-hot dispatch einsum (O(tokens x experts x capacity)
+FLOPs plus a dispatch tensor that dwarfs the expert GEMMs) with a
+permutation: stable-argsort the (token, k)-slot assignments by expert id,
+gather tokens into expert-contiguous rows, run one ragged grouped GEMM per
+projection, and scatter-add the results back under the gate weights.  No
+token is ever dropped — there is no capacity.
+
+Padded row layout (the grouped-GEMM tile invariant, DESIGN.md §7): each
+expert's run of sorted rows is padded to a multiple of ``block_m`` so every
+``block_m``-row tile of the permuted buffer belongs to exactly ONE expert.
+The kernel then needs only a per-tile expert id (scalar-prefetched on TPU)
+to pick its weight block; padding rows are zero and compute zeros.
+
+Everything here is shape-static and jit/eval_shape-safe: the padded buffer
+size is the worst-case bound ``T*k + E*(block_m-1)`` rounded up, reached
+only when every expert's count is maximally misaligned.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+def round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+class DispatchPlan(NamedTuple):
+    """Index state of one sorted dispatch (all int32, nondifferentiable).
+
+    order:       (T*k,)   assignment slots sorted stably by expert id
+    dest:        (T*k,)   destination row of each sorted slot in the padded
+                          expert-contiguous buffer
+    tile_expert: (m_pad / block_m,) expert id owning each block_m-row tile
+    group_sizes: (E,)     real (unpadded) rows per expert
+    m_pad:       int      static padded row count (multiple of block_m)
+    block_m:     int
+    top_k:       int
+    """
+    order: jnp.ndarray
+    dest: jnp.ndarray
+    tile_expert: jnp.ndarray
+    group_sizes: jnp.ndarray
+    m_pad: int
+    block_m: int
+    top_k: int
+
+
+def make_plan(expert_idx, num_experts: int, block_m: int) -> DispatchPlan:
+    """expert_idx: (T, k) int — top-k expert assignment per token."""
+    T, k = expert_idx.shape
+    M = T * k
+    m_pad = round_up(M + num_experts * (block_m - 1), block_m)
+
+    flat_e = expert_idx.reshape(M).astype(jnp.int32)
+    order = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+    sorted_e = flat_e[order]
+
+    sizes = jnp.zeros(num_experts, jnp.int32).at[flat_e].add(1)
+    padded = -(-sizes // block_m) * block_m
+    zero = jnp.zeros((1,), jnp.int32)
+    pstart = jnp.concatenate([zero, jnp.cumsum(padded)])[:num_experts]
+    start = jnp.concatenate([zero, jnp.cumsum(sizes)])[:num_experts]
+
+    rank = jnp.arange(M, dtype=jnp.int32) - start[sorted_e]
+    dest = pstart[sorted_e] + rank
+
+    n_tiles = m_pad // block_m
+    tile_row0 = jnp.arange(n_tiles, dtype=jnp.int32) * block_m
+    # largest e with pstart[e] <= tile_row0; empty experts (duplicate starts)
+    # resolve to the following non-empty one, trailing tiles clamp to E-1
+    tile_expert = jnp.clip(
+        jnp.searchsorted(pstart, tile_row0, side="right") - 1,
+        0, num_experts - 1).astype(jnp.int32)
+
+    return DispatchPlan(order=order, dest=dest, tile_expert=tile_expert,
+                        group_sizes=sizes, m_pad=m_pad, block_m=block_m,
+                        top_k=k)
+
+
+def permute(x, plan: DispatchPlan):
+    """x: (T, d) -> (m_pad, d), rows grouped by expert (zeros in padding).
+
+    A token routed to k experts contributes k gathered copies.  The scatter
+    indices are unique, so autodiff's transpose is a pure gather of the
+    cotangent at ``dest`` — no dispatch tensor is ever materialised.
+    """
+    src = plan.order // plan.top_k
+    out = jnp.zeros((plan.m_pad, x.shape[1]), x.dtype)
+    # dest is strictly increasing by construction (expert-major, rank-minor)
+    return out.at[plan.dest].set(x[src], unique_indices=True,
+                                 indices_are_sorted=True)
+
+
+def combine(ys, gates, plan: DispatchPlan, num_tokens: int):
+    """ys: (m_pad, d), gates: (T, k) -> y: (T, d).
+
+    Gathers each slot's expert output back out of the padded buffer and
+    scatter-adds it into its token row under the gate weight — the exact
+    transpose of :func:`permute` plus the gate product.
+    """
+    g_sorted = gates.reshape(-1)[plan.order]
+    # f32 accumulation across the k contributions (token rows repeat, so the
+    # indices are NOT unique here), rounded once — matching the einsum
+    # backend's f32 combine contraction in low-precision dtypes
+    contrib = ys[plan.dest].astype(jnp.float32) * g_sorted[:, None].astype(jnp.float32)
+    out = jnp.zeros((num_tokens, ys.shape[1]), jnp.float32)
+    return out.at[plan.order // plan.top_k].add(contrib).astype(ys.dtype)

@@ -1,0 +1,29 @@
+"""Pure-JAX reference for the ragged grouped GEMM (CPU / parity oracle).
+
+Mirrors the Pallas kernel tile-for-tile: reshape the padded row buffer into
+(n_tiles, block_m, K) tiles, gather each tile's expert weight block, batch
+the matmuls.  Numerically identical contraction order (f32 accumulation) so
+the parity harness can assert tight tolerances against the kernel.
+
+The (n_tiles, K, N) gathered-weight intermediate makes this the memory-
+hungrier path on a real accelerator — it exists as the CPU fallback and as
+the oracle the Pallas kernel is tested against, not as the production path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def grouped_matmul_ref(lhs, rhs, tile_expert, *, block_m: int):
+    """lhs: (m_pad, K), rhs: (E, K, N), tile_expert: (m_pad/block_m,) int32."""
+    m_pad, K = lhs.shape
+    N = rhs.shape[-1]
+    assert m_pad % block_m == 0, (m_pad, block_m)
+    tiles = lhs.reshape(m_pad // block_m, block_m, K)
+    out = jnp.einsum("tmk,tkn->tmn", tiles, rhs[tile_expert],
+                     preferred_element_type=jnp.float32)
+    return out.astype(lhs.dtype).reshape(m_pad, N)

@@ -228,12 +228,18 @@ def plan_main(argv):
                          "adamw shows the full m/v-state floor instead")
     ap.add_argument("--reduced", action="store_true",
                     help="plan the smoke-scale configs (CPU tests)")
+    ap.add_argument("--moe-backend", default=None,
+                    choices=["einsum", "grouped"],
+                    help="override ModelConfig.moe_backend for the plan "
+                         "trace (grouped shrinks MoE dispatch residuals)")
     args = ap.parse_args(argv)
 
     archs = ARCHS if args.all else [_resolve_arch(args.arch or "qwen2-moe-a2.7b")]
     unfit = []
     for arch in archs:
         cfg = get_config(arch, reduced=args.reduced)
+        if args.moe_backend is not None:
+            cfg = cfg.replace(moe_backend=args.moe_backend)
         try:
             p = plan(cfg, budget_gb=args.budget_gb, batch=args.batch,
                      seq=args.seq, optimizer=args.optimizer)
@@ -263,6 +269,8 @@ def main():
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--hsdp", action="store_true")
     ap.add_argument("--micro-tokens", type=int, default=8192)
+    ap.add_argument("--moe-backend", default=None,
+                    choices=["einsum", "grouped"])
     args = ap.parse_args()
 
     meshes = []
@@ -284,8 +292,11 @@ def main():
         for arch, sh in cells:
             tag = f"{arch} x {sh} @ {tuple(mesh.shape.values())}"
             try:
+                overrides = ({"moe_backend": args.moe_backend}
+                             if args.moe_backend else None)
                 res, _, compiled = lower_cell(
                     arch, sh, mesh, micro_tokens=args.micro_tokens,
+                    model_overrides=overrides,
                     seq_parallel=args.seq_parallel, hsdp=args.hsdp)
                 print(f"[OK]   {tag}  flops={res.get('flops', 0):.3e} "
                       f"coll={sum(res.get('collectives', {}).values()):.3e}B "

@@ -1,7 +1,10 @@
 """Serving launcher: batched prefill + decode with KV / SSM-state caches.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
-        [--batch 4] [--prompt-len 32] [--gen 32]
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
+        [--no-reduced] [--batch 4] [--prompt-len 32] [--gen 32]
+
+Reduced (smoke-scale) configs are the default on this CPU container;
+``--no-reduced`` serves the full config (real accelerator only).
 """
 from __future__ import annotations
 
@@ -12,7 +15,10 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction so the default can actually be turned off
+    # (--reduced used to be store_true with default=True: a no-op flag)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)

@@ -36,6 +36,10 @@ def main():
     ap.add_argument("--plan", action="store_true",
                     help="run the memory planner even without an explicit "
                          "--hbm-budget-gb")
+    ap.add_argument("--moe-backend", default=None,
+                    choices=["einsum", "grouped"],
+                    help="override ModelConfig.moe_backend (grouped = "
+                         "sort-based dropless dispatch, repro.kernels.moe)")
     args = ap.parse_args()
 
     import jax
@@ -48,6 +52,8 @@ def main():
     from repro.train.driver import RunConfig, train
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.moe_backend is not None:
+        cfg = cfg.replace(moe_backend=args.moe_backend)
     model = Model(cfg)
     print(f"[train] {cfg.name}: {model.num_params() / 1e6:.1f}M params, "
           f"family={cfg.family}, reversible={cfg.reversible}")

@@ -194,6 +194,71 @@ def estimate(cfg: ModelConfig, batch: int, seq: int,
         unit_host_bytes=unit_host)
 
 
+def moe_dispatch_cost(cfg: ModelConfig, batch: int, seq: int,
+                      backend: Optional[str] = None,
+                      block_m: int = 128) -> dict:
+    """Analytic per-MoE-layer cost of the token-routing machinery alone —
+    dispatch/combine FLOPs, bytes moved, backward residual bytes, and the
+    row count fed to the expert GEMMs.  Expert-GEMM FLOPs themselves are
+    excluded (equal work per executed row on either backend).
+
+    ``einsum``: the dense one-hot dispatch/combine tensors are
+    (G, group, E, C) f32 — quadratic in the group size — and both are
+    backward residuals; the expert GEMMs run over G*E*C capacity rows
+    (empty slots included, dropped tokens excluded).
+
+    ``grouped`` (repro.kernels.moe): dispatch is a permutation — zero MAC
+    FLOPs, one gather + one scatter of the token rows each way, int32 index
+    vectors as the only dispatch residuals; the expert GEMMs run over
+    exactly T*k assignment rows plus per-expert tile padding.
+
+    The full residual story of a *model* under either backend needs no
+    special-casing here: ``residual_bytes`` traces ``Model.loss`` with the
+    config's ``moe_backend`` and picks the difference up automatically —
+    this helper exists for `benchmarks/moe_dispatch.py` and planner docs.
+    """
+    import math as _math
+
+    from repro.models import moe as moe_lib
+
+    backend = backend or cfg.moe_backend
+    T = batch * seq
+    E = moe_lib.padded_experts(cfg.num_experts)
+    k, d = cfg.top_k, cfg.d_model
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+
+    # Byte accounting counts the same boundary for both backends: the token
+    # rows moved into and out of expert space, plus whatever dispatch
+    # structure the contraction has to stream.
+    if backend == "einsum":
+        g = min(moe_lib.GROUP, T)
+        G = _math.ceil(T / g)
+        C = moe_lib._capacity(g, E, k, cfg.capacity_factor)
+        disp_elems = G * g * E * C                    # one-hot dispatch tensor
+        row_traffic = 2 * (T + G * E * C) * d * itemsize   # in + out einsums
+        return {
+            "backend": "einsum",
+            "dispatch_flops": 4 * disp_elems * d,     # dispatch + combine einsums
+            "dispatch_bytes": 2 * disp_elems * 4 + row_traffic,
+            "residual_bytes": 2 * disp_elems * 4,     # both saved for backward
+            "expert_rows": G * E * C,
+        }
+
+    assert backend == "grouped", backend
+    M = T * k
+    from repro.kernels.moe.dispatch import round_up
+    m_pad = round_up(M + E * (block_m - 1), block_m)
+    n_tiles = m_pad // block_m
+    row_traffic = ((M + m_pad) + (m_pad + T)) * d * itemsize  # gather + scatter
+    return {
+        "backend": "grouped",
+        "dispatch_flops": 0,                          # permutation only
+        "dispatch_bytes": row_traffic + (3 * M + n_tiles) * 4,  # + int32 indices
+        "residual_bytes": 2 * M * 4 + n_tiles * 4,    # int32 order/dest + tile map
+        "expert_rows": m_pad,
+    }
+
+
 def device_memory_stats() -> Optional[dict]:
     """Live allocator stats of device 0 (None on backends without them, e.g.
     CPU) — the runtime cross-check for the static estimates."""

@@ -11,6 +11,11 @@ unit so the scanned param tree stays homogeneous.
 
 MoE aux (load-balancing) loss is intentionally omitted: RevFFN freezes the
 routers in both training stages (paper §3.3), making the aux term a constant.
+
+MoE expert execution follows ``cfg.moe_backend``: the dense one-hot dispatch
+einsum ("einsum") or the sort-based dropless grouped-GEMM path ("grouped",
+repro.kernels.moe / DESIGN.md §7) — both the reversible coupling ``_moe_G``
+and the standard baseline block read it through ``moe_lib.moe_apply``.
 """
 from __future__ import annotations
 
@@ -574,6 +579,9 @@ _BUILDERS = {
 
 class Model:
     def __init__(self, cfg: ModelConfig):
+        assert cfg.moe_backend in moe_lib.MOE_BACKENDS, (
+            f"unknown moe_backend {cfg.moe_backend!r}; "
+            f"known: {moe_lib.MOE_BACKENDS}")
         self.cfg = cfg
         self.stacks, self.shared_specs = _BUILDERS[cfg.family](cfg)
         d = cfg.d_model

@@ -1,12 +1,23 @@
-"""Mixture-of-Experts layer: top-k router + GShard-style grouped-capacity
-dispatch/combine einsums + shared experts.
+"""Mixture-of-Experts layer: top-k router + two interchangeable dispatch
+backends + shared experts.
 
-TPU adaptation (DESIGN.md §2): instead of CUDA scatter/gather we use the
-dense one-hot dispatch einsum over (group, token, expert, capacity).  Tokens
-are split into groups of <=512 so the dispatch tensor is linear in total
-tokens: T * E * C = T * group * k * cf.  Experts are zero-padded to a
-multiple of 16 (EP_PAD) so the expert axis divides the `model` mesh axis
-(padded experts are masked to -inf in the router and receive no tokens).
+``cfg.moe_backend`` selects the expert-execution path (overridable per call):
+
+* ``"einsum"`` — GShard-style grouped-capacity dispatch/combine einsums
+  (DESIGN.md §2).  Tokens are split into groups of <= ``GROUP`` so the dense
+  one-hot dispatch tensor is linear in total tokens (T * group * k * cf);
+  token counts that do not divide the group size are zero-padded to the next
+  multiple and the pad slots are masked out of routing, capacity and the aux
+  loss.  Tokens beyond an expert's capacity are dropped.
+
+* ``"grouped"`` — sort-based dropless dispatch (repro.kernels.moe,
+  DESIGN.md §7): stable argsort by expert id, ragged grouped GEMMs (Pallas
+  on TPU, pure-JAX tiled fallback elsewhere), gate-weighted combine.  No
+  capacity, no drops, no dispatch tensor.
+
+Experts are zero-padded to a multiple of 16 (EP_PAD) so the expert axis
+divides the `model` mesh axis (padded experts are masked to -inf in the
+router and receive no tokens).
 
 Routers can be frozen (paper stage 2) via the schedule mask — the router
 weight lives at key "router" in the layer param dict.
@@ -24,6 +35,8 @@ from repro.models.spec import ParamSpec
 
 EP_PAD = 16
 GROUP = 512
+
+MOE_BACKENDS = ("einsum", "grouped")
 
 
 def padded_experts(num_experts: int) -> int:
@@ -57,46 +70,109 @@ def _capacity(tokens_per_group: int, num_experts: int, top_k: int,
     return max(4, int(math.ceil(c / 4) * 4))
 
 
-def moe_apply(p, cfg: ModelConfig, x, *, group: Optional[int] = None):
-    """x: (B, S, d) -> (y, aux_loss).  Pure einsum path, GSPMD-shardable."""
-    B, S, d = x.shape
+def _route(p, cfg: ModelConfig, xf):
+    """xf: (T, d) -> probs (T, E) f32, gate_vals (T, k) f32, expert_idx (T, k)."""
     E, k = padded_experts(cfg.num_experts), cfg.top_k
-    T = B * S
-    g_size = min(group or GROUP, T)
-    assert T % g_size == 0, (T, g_size)
-    G = T // g_size
-    xg = x.reshape(G, g_size, d)
-
-    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
     if E > cfg.num_experts:  # mask padded experts
         pad_mask = jnp.arange(E) < cfg.num_experts
-        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+        logits = jnp.where(pad_mask[None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
-
-    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (G, t, k)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
     gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    return probs, gate_vals, expert_idx
+
+
+def _pad_rows(a, pad: int):
+    if pad == 0:
+        return a
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths)
+
+
+def _einsum_dispatch(p, cfg: ModelConfig, xf, probs, gate_vals, expert_idx,
+                     g_size: int):
+    """Dense one-hot dispatch/combine einsums over token groups.
+
+    Token counts not divisible by ``g_size`` are padded up; pad slots carry
+    zero routing weight (no capacity consumed, no aux contribution).
+    Returns (y (T, d), aux scalar f32).
+    """
+    T, d = xf.shape
+    E, k = padded_experts(cfg.num_experts), cfg.top_k
+    pad = (-T) % g_size
+    G = (T + pad) // g_size
+
+    xg = _pad_rows(xf, pad).reshape(G, g_size, d)
+    probs_g = _pad_rows(probs, pad).reshape(G, g_size, E)
+    gate_g = _pad_rows(gate_vals, pad).reshape(G, g_size, k)
+    idx_g = _pad_rows(expert_idx, pad).reshape(G, g_size, k)
+    valid = _pad_rows(jnp.ones((T,), jnp.float32), pad).reshape(G, g_size)
 
     # position-in-expert with top-k priority (k-major within token order)
-    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (G, t, k, E)
+    onehot = jax.nn.one_hot(idx_g, E, dtype=jnp.float32)     # (G, t, k, E)
+    onehot = onehot * valid[..., None, None]                 # pads route nowhere
     flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * g_size, E)  # k-major
-    pos = jnp.cumsum(flat, axis=1) - flat                      # (G, k*t, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # (G, k*t, E)
     C = _capacity(g_size, E, k, cfg.capacity_factor)
     keep = (pos < C) * flat
     pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
     # back to token-major: (G, k, t, E, C) -> sum over k
     pos_oh = pos_oh.reshape(G, k, g_size, E, C)
-    dispatch = jnp.sum(pos_oh, axis=1)                         # (G, t, E, C) 0/1
+    dispatch = jnp.sum(pos_oh, axis=1)                       # (G, t, E, C) 0/1
     gates_te = jnp.einsum("gtke,gtk->gte",
                           onehot * keep.reshape(G, k, g_size, E).transpose(0, 2, 1, 3),
-                          gate_vals)
-    combine = dispatch * gates_te[..., None]                   # (G, t, E, C)
+                          gate_g)
+    combine = dispatch * gates_te[..., None]                 # (G, t, E, C)
 
     # dispatch -> expert compute -> combine
-    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(xf.dtype), xg)
     h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])) * \
         jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
     expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
-    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), expert_out)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(xf.dtype), expert_out)
+    y = y.reshape(G * g_size, d)[:T]
+
+    # load-balancing aux loss (Switch): E * mean_g(sum_e frac_e * mean_prob_e),
+    # masked so pad slots do not dilute the per-group statistics
+    n_valid = jnp.sum(valid, axis=1)                         # (G,) >= 1
+    frac = jnp.sum(jnp.sum(onehot, axis=2), axis=1) / n_valid[:, None]
+    mean_p = jnp.sum(probs_g * valid[..., None], axis=1) / n_valid[:, None]
+    aux = cfg.num_experts * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+    return y, aux.astype(jnp.float32)
+
+
+def _grouped_dispatch(p, cfg: ModelConfig, xf, probs, gate_vals, expert_idx):
+    """Sort-based dropless dispatch (repro.kernels.moe).  No capacity: every
+    (token, k) assignment executes.  Returns (y (T, d), aux scalar f32)."""
+    from repro.kernels.moe import grouped_expert_ffn
+    E = padded_experts(cfg.num_experts)
+    y = grouped_expert_ffn(xf, expert_idx, gate_vals.astype(xf.dtype),
+                           p["w_gate"], p["w_up"], p["w_down"])
+    # same Switch aux statistic, computed globally (no token groups here)
+    frac = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
+                            axis=1), axis=0)                 # (E,)
+    aux = cfg.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return y, aux.astype(jnp.float32)
+
+
+def moe_apply(p, cfg: ModelConfig, x, *, group: Optional[int] = None,
+              backend: Optional[str] = None):
+    """x: (B, S, d) -> (y, aux_loss).  GSPMD-shardable either way."""
+    B, S, d = x.shape
+    T = B * S
+    backend = backend or cfg.moe_backend
+    assert backend in MOE_BACKENDS, backend
+    xf = x.reshape(T, d)
+
+    probs, gate_vals, expert_idx = _route(p, cfg, xf)
+    if backend == "grouped":
+        y, aux = _grouped_dispatch(p, cfg, xf, probs, gate_vals, expert_idx)
+    else:
+        g_size = min(group or GROUP, T)
+        y, aux = _einsum_dispatch(p, cfg, xf, probs, gate_vals, expert_idx,
+                                  g_size)
     y = y.reshape(B, S, d)
 
     if "shared" in p:
@@ -106,18 +182,14 @@ def moe_apply(p, cfg: ModelConfig, x, *, group: Optional[int] = None):
         ys = jnp.einsum("bsf,fd->bsd", hs, sh["w_down"])
         sgate = jax.nn.sigmoid(jnp.einsum("bsd,do->bso", x, sh["gate"]))
         y = y + sgate.astype(y.dtype) * ys
-
-    # load-balancing aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
-    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=1)           # (G, E)
-    mean_p = jnp.mean(probs, axis=1)                           # (G, E)
-    aux = cfg.num_experts * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
-    return y, aux.astype(jnp.float32)
+    return y, aux
 
 
 def moe_apply_oracle(p, cfg: ModelConfig, x):
     """Dense per-token oracle (computes every expert on every token).
-    Used only in tests to validate the dispatch path (no capacity drops when
-    capacity_factor is large)."""
+    Used only in tests to validate the dispatch paths (the grouped backend
+    matches it exactly; the einsum backend matches when capacity_factor is
+    large enough that nothing drops)."""
     B, S, d = x.shape
     E, k = padded_experts(cfg.num_experts), cfg.top_k
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))

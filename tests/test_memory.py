@@ -170,6 +170,28 @@ def test_report_lists_every_segment(setup):
     assert "store" in rep and "FITS" in rep and cfg.name in rep
 
 
+def test_grouped_moe_backend_residuals_below_einsum_and_plan_fits():
+    """Grouped dispatch (repro.kernels.moe) must shrink the backward
+    residuals the planner budgets for: its store-everything trace stays
+    below the einsum path's, and a budget sized to the grouped trace still
+    yields a fitting plan."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(num_layers=2)
+    n = 2
+    r_einsum = est_mod.residual_bytes(Model(cfg), 2, 256,
+                                      save_memory=["store"] * n)
+    cfg_g = cfg.replace(moe_backend="grouped")
+    r_grouped = est_mod.residual_bytes(Model(cfg_g), 2, 256,
+                                       save_memory=["store"] * n)
+    assert r_grouped < r_einsum, (r_grouped, r_einsum)
+
+    # a budget the einsum trace cannot meet all-store still fits grouped
+    budget_gb = (r_grouped + 256 * 2**20) / GiB
+    p = plan(cfg_g, budget_gb=budget_gb, batch=2, seq=256,
+             optimizer="lomo")
+    assert p.fits
+    assert p.device_bytes <= p.budget_bytes
+
+
 # ------------------------------------------------------------- mixed stack
 
 def test_policy_segments_grouping():

@@ -63,6 +63,38 @@ def test_top1_moe_llama4():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("backend", ["einsum", "grouped"])
+def test_group_remainder_matches_ungrouped_reference(backend):
+    """T=513 (not divisible by GROUP=512): the einsum path zero-pads the
+    trailing group with masked slots, the grouped path needs no groups at
+    all — both must equal an ungrouped single-group reference under
+    capacity headroom."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        capacity_factor=16.0)
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    T = moe_lib.GROUP + 1                                 # 513
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, T, cfg.d_model)) * 0.5
+    y, aux = moe_lib.moe_apply(p, cfg, x, backend=backend)   # group=GROUP pads
+    want, _ = moe_lib.moe_apply(p, cfg, x, group=T, backend="einsum")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert bool(jnp.isfinite(aux)) and float(aux) > 0.0
+
+
+def test_group_remainder_small_tail_group():
+    """Remainder smaller than half a group (T=40, group=32): pad slots must
+    not consume capacity or skew the aux statistic."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        capacity_factor=16.0)
+    p = _layer(cfg, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 40, cfg.d_model)) * 0.5
+    y, aux = moe_lib.moe_apply(p, cfg, x, group=32)
+    want = moe_lib.moe_apply_oracle(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert bool(jnp.isfinite(aux))
+
+
 def test_moe_grads_flow_to_experts_not_router_when_masked():
     from repro.core import schedule
     cfg = get_config("qwen2-moe-a2.7b", reduced=True)

@@ -1,0 +1,215 @@
+"""Grouped-GEMM MoE dispatch subsystem (repro.kernels.moe, DESIGN.md §7):
+dispatch-plan invariants, Pallas-interpret vs pure-JAX kernel parity,
+grouped-vs-einsum backend parity, custom_vjp gradients, and composition
+with the reversible stack's recompute-in-backward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.kernels.moe import (dispatch as dsp, grouped_expert_ffn,
+                               grouped_matmul, grouped_matmul_pallas,
+                               grouped_matmul_ref)
+from repro.models import moe as moe_lib
+from repro.models.spec import initialize
+
+MOE_ARCHS = ["qwen2-moe-a2.7b", "llama4-scout-17b-a16e"]
+
+
+def _layer(cfg, key):
+    return initialize(moe_lib.moe_specs(cfg), key, "float32")
+
+
+# ------------------------------------------------------------- dispatch plan
+
+def test_dispatch_plan_invariants():
+    """Every sorted slot lands in its expert's padded run; every tile is
+    single-expert; destinations are unique."""
+    key = jax.random.PRNGKey(0)
+    T, k, E, bm = 57, 3, 7, 8
+    expert_idx = jax.random.randint(key, (T, k), 0, E)
+    plan = dsp.make_plan(expert_idx, E, bm)
+
+    dest = np.asarray(plan.dest)
+    assert len(np.unique(dest)) == T * k                  # no collisions
+    assert plan.m_pad % bm == 0 and dest.max() < plan.m_pad
+
+    flat_e = np.asarray(expert_idx).reshape(-1)
+    sorted_e = flat_e[np.asarray(plan.order)]
+    tile_of = dest // bm
+    te = np.asarray(plan.tile_expert)
+    np.testing.assert_array_equal(te[tile_of], sorted_e)  # tile -> expert map
+    assert int(jnp.sum(plan.group_sizes)) == T * k
+
+
+def test_dispatch_permute_combine_roundtrip():
+    """combine(permute(x)) with unit gates and an identity expert is a
+    k-fold sum of x — the permutation loses nothing (dropless)."""
+    T, d, k, E, bm = 33, 16, 2, 5, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d))
+    expert_idx = jax.random.randint(jax.random.PRNGKey(2), (T, k), 0, E)
+    plan = dsp.make_plan(expert_idx, E, bm)
+    xs = dsp.permute(x, plan)
+    y = dsp.combine(xs, jnp.ones((T, k)), plan, T)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * k,
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("M_tiles,K,N,E,bm", [
+    (8, 32, 64, 4, 16),
+    (5, 128, 128, 3, 8),
+    (16, 64, 96, 9, 32),      # N not a multiple of 128
+])
+def test_grouped_matmul_pallas_matches_ref(M_tiles, K, N, E, bm):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    lhs = jax.random.normal(ks[0], (M_tiles * bm, K))
+    rhs = jax.random.normal(ks[1], (E, K, N)) * 0.1
+    te = jax.random.randint(ks[2], (M_tiles,), 0, E).astype(jnp.int32)
+    te = jnp.sort(te)                       # expert-contiguous, like dispatch
+    out = grouped_matmul_pallas(lhs, rhs, te, block_m=bm, interpret=True)
+    want = grouped_matmul_ref(lhs, rhs, te, block_m=bm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_grouped_matmul_custom_vjp_grads(impl):
+    """d_lhs (a grouped GEMM against transposed weights) and d_rhs (the
+    segment-summed tgmm) must match autodiff of the dense gathered form."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    bm, nt, K, N, E = 8, 6, 16, 24, 4
+    lhs = jax.random.normal(ks[0], (nt * bm, K))
+    rhs = jax.random.normal(ks[1], (E, K, N)) * 0.2
+    te = jnp.sort(jax.random.randint(ks[2], (nt,), 0, E).astype(jnp.int32))
+
+    def f(lhs, rhs):
+        return jnp.sum(jnp.square(grouped_matmul(lhs, rhs, te, bm, impl)))
+
+    def f_dense(lhs, rhs):
+        tiles = lhs.reshape(nt, bm, K)
+        return jnp.sum(jnp.square(
+            jnp.einsum("tmk,tkn->tmn", tiles, rhs[te])))
+
+    g1 = jax.grad(f, argnums=(0, 1))(lhs, rhs)
+    g2 = jax.grad(f_dense, argnums=(0, 1))(lhs, rhs)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_ffn_pallas_impl_matches_jax_impl():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (96, cfg.d_model)) * 0.5
+    E = moe_lib.padded_experts(cfg.num_experts)
+    logits = x @ p["router"]
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
+    args = (x, idx, gates, p["w_gate"], p["w_up"], p["w_down"])
+    y_jax = grouped_expert_ffn(*args, block_m=16, impl="jax")
+    y_pl = grouped_expert_ffn(*args, block_m=16, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_jax),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- backend parity
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_grouped_matches_einsum_with_headroom(arch):
+    """Acceptance: <= 1e-4 (fp32) against the einsum backend on every MoE
+    config in reduced mode, under capacity headroom so nothing drops."""
+    cfg = get_config(arch, reduced=True).replace(capacity_factor=16.0)
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+    y_e, aux_e = moe_lib.moe_apply(p, cfg, x, backend="einsum")
+    y_g, aux_g = moe_lib.moe_apply(p, cfg, x, backend="grouped")
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_e),
+                               rtol=1e-4, atol=1e-4)
+    # same Switch aux statistic (einsum averages per group; one group here)
+    np.testing.assert_allclose(float(aux_g), float(aux_e), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_grouped_is_dropless(arch):
+    """With the *default* (tight) capacity factor the einsum backend drops
+    tokens; the grouped backend must still equal the dense oracle exactly."""
+    cfg = get_config(arch, reduced=True).replace(capacity_factor=0.5)
+    p = _layer(cfg, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, cfg.d_model)) * 0.5
+    y_g, _ = moe_lib.moe_apply(p, cfg, x, backend="grouped")
+    want = moe_lib.moe_apply_oracle(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_gradients_match_einsum_with_headroom():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        capacity_factor=16.0)
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model)) * 0.5
+
+    def loss(p, backend):
+        y, _ = moe_lib.moe_apply(p, cfg, x, backend=backend)
+        return jnp.sum(jnp.square(y))
+
+    g_e = jax.grad(loss)(p, "einsum")
+    g_g = jax.grad(loss)(p, "grouped")
+    for (ka, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(g_e),
+                               jax.tree_util.tree_leaves_with_path(g_g)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=5e-4, atol=5e-4, err_msg=str(ka))
+
+
+# ------------------------------------------------------------- model level
+
+def test_model_grouped_backend_forward_and_reversible_grads():
+    """End to end through Model: the grouped backend under the O(1)
+    reversible stack (backward reconstructs inputs and re-runs the block
+    under jax.vjp — the custom_vjp must compose) against the einsum model."""
+    from repro.models.model import Model
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layers=2, capacity_factor=16.0)
+    m_e = Model(cfg)
+    m_g = Model(cfg.replace(moe_backend="grouped"))
+    params = m_e.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(m_g.forward(params, toks)),
+                               np.asarray(m_e.forward(params, toks)),
+                               rtol=1e-4, atol=1e-4)
+    batch = {"tokens": toks}
+    g_e = jax.grad(lambda p: m_e.loss(p, batch, save_memory=True))(params)
+    g_g = jax.grad(lambda p: m_g.loss(p, batch, save_memory=True))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g_e),
+                    jax.tree_util.tree_leaves(g_g)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_model_grouped_backend_jits_and_trains():
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamW
+    from repro.train.trainer import make_train_step
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layers=2, moe_backend="grouped")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(model, opt))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64),
+                                          0, cfg.vocab_size)}
+    params, state, metrics = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_unknown_backend_rejected():
+    from repro.models.model import Model
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    with pytest.raises(AssertionError):
+        Model(cfg.replace(moe_backend="bogus"))
+    p = _layer(cfg, jax.random.PRNGKey(0))
+    x = jnp.zeros((1, 16, cfg.d_model))
+    with pytest.raises(AssertionError):
+        moe_lib.moe_apply(p, cfg, x, backend="bogus")
