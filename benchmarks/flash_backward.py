@@ -1,0 +1,155 @@
+"""Flash-attention backward benchmark: dense-reference vjp vs flash kernels.
+
+Three measurements per attention arch, written to BENCH_flash_backward.json:
+
+  * analytic backward cost at the FULL config and S=1024
+    (repro.memory.estimator.attention_backward_cost) — residual + transient
+    bytes for the dense-ref and flash backwards; nothing is allocated.  The
+    gate requires flash transients strictly below the dense recompute here.
+  * reduced-mode wall clock of one attention vjp, dense-ref backward vs the
+    flash backward (this CPU container runs the tiled pure-JAX fallback, so
+    treat times as recompute-overhead ratios, not TPU throughput).
+  * gradient parity between the two backwards, plus the trace-level vjp
+    residual bytes of each (jax.eval_shape — asserts the flash path keeps no
+    (S, S) tensor).
+
+    PYTHONPATH=src python benchmarks/flash_backward.py [--quick] \
+        [--out BENCH_flash_backward.json] [--batch 2] [--seq 256]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCHS, get_config
+from repro.kernels import ops, ref
+from repro.memory.estimator import attention_backward_cost
+
+ATTN_ARCHS = [a for a in ARCHS if get_config(a).family != "ssm"]
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)                     # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _vjp_residuals(fn, *args):
+    """ShapeDtypeStructs autodiff saves for backward of ``fn`` (eval_shape —
+    nothing allocated)."""
+    def res(*a):
+        _, vjp_fn = jax.vjp(fn, *a)
+        return tuple(leaf for leaf in jax.tree_util.tree_leaves(vjp_fn)
+                     if hasattr(leaf, "shape"))
+    return jax.eval_shape(res, *args)
+
+
+def _residual_stats(leaves, seq):
+    total = sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves)
+    has_s2 = any(sum(1 for d in l.shape if d == seq) >= 2 and seq > 1
+                 for l in leaves)
+    return total, has_s2
+
+
+def bench_arch(arch: str, batch: int, seq: int, iters: int) -> dict:
+    full = get_config(arch)
+    row = {"arch": arch, "reduced_shape": [batch, seq],
+           "full_analytic_s1024": attention_backward_cost(
+               full, batch=8, seq=1024)}
+
+    cfg = get_config(arch, reduced=True)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window, softcap = cfg.sliding_window, cfg.logit_softcap
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (batch, H, seq, hd))
+    k = jax.random.normal(ks[1], (batch, KV, seq, hd))
+    v = jax.random.normal(ks[2], (batch, KV, seq, hd))
+    ct = jax.random.normal(ks[3], q.shape)
+
+    flash_fn = functools.partial(ops.flash_attention_trainable,
+                                 causal=True, window=window, softcap=softcap)
+    dense_fn = functools.partial(ref.flash_attention_ref,
+                                 causal=True, window=window, softcap=softcap)
+
+    def grad_via(fn):
+        def run(q, k, v):
+            out, vjp = jax.vjp(fn, q, k, v)
+            return vjp(ct)
+        return jax.jit(run)
+
+    g_flash_fn, g_dense_fn = grad_via(flash_fn), grad_via(dense_fn)
+    parity = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(g_flash_fn(q, k, v), g_dense_fn(q, k, v)))
+
+    res_flash, res_dense = (_vjp_residuals(fn, q, k, v)
+                            for fn in (flash_fn, dense_fn))
+    fl_bytes, fl_s2 = _residual_stats(res_flash, seq)
+    dn_bytes, _ = _residual_stats(res_dense, seq)
+
+    row["reduced"] = {
+        "dense": {"grad_s": _time(g_dense_fn, q, k, v, iters=iters),
+                  "residual_bytes": dn_bytes},
+        "flash": {"grad_s": _time(g_flash_fn, q, k, v, iters=iters),
+                  "residual_bytes": fl_bytes,
+                  "has_SxS_residual": fl_s2},
+    }
+    row["parity_max_abs_err"] = parity
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_flash_backward.json")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing iterations (CI)")
+    args = ap.parse_args()
+
+    results = []
+    for arch in ATTN_ARCHS:
+        row = bench_arch(arch, args.batch, args.seq,
+                         iters=2 if args.quick else 5)
+        results.append(row)
+        an = row["full_analytic_s1024"]
+        red = row["reduced"]
+        print(f"[{arch}] full S=1024 backward/layer: dense transient "
+              f"{an['dense']['transient_bytes'] / 2**30:.2f} GiB -> flash "
+              f"{an['flash']['transient_bytes'] / 2**20:.2f} MiB | residuals "
+              f"{an['dense']['residual_bytes'] / 2**20:.0f} -> "
+              f"{an['flash']['residual_bytes'] / 2**20:.0f} MiB")
+        print(f"  reduced {args.batch}x{args.seq}: grad "
+              f"{red['dense']['grad_s'] * 1e3:.1f} -> "
+              f"{red['flash']['grad_s'] * 1e3:.1f} ms  residuals "
+              f"{red['dense']['residual_bytes'] / 2**20:.2f} -> "
+              f"{red['flash']['residual_bytes'] / 2**20:.2f} MiB  "
+              f"parity {row['parity_max_abs_err']:.2e}", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+    bad = 0
+    for row in results:
+        an = row["full_analytic_s1024"]
+        ok = (an["flash"]["transient_bytes"] < an["dense"]["transient_bytes"]
+              and not row["reduced"]["flash"]["has_SxS_residual"]
+              and row["parity_max_abs_err"] < 1e-4)
+        if not ok:
+            print(f"[FAIL] {row['arch']}: flash backward not strictly "
+                  f"cheaper, S^2 residual present, or parity broken")
+            bad += 1
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

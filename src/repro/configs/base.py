@@ -79,8 +79,11 @@ class ModelConfig:
     remat_policy: str = "none"     # for the SFT+checkpointing baseline
     attn_q_chunk: int = 1024       # q-block chunking (memory); 0 disables
     loss_chunk: int = 512          # seq-chunked CE loss (memory); 0 disables
-    use_flash_kernel: bool = False  # Pallas flash attention on the train path
-                                    # (TPU; interpret-mode on CPU — tests only)
+    use_flash_kernel: bool = False  # flash attention on the train path
+                                    # (Pallas fwd+bwd kernels on TPU, tiled
+                                    # pure-JAX fallback elsewhere)
+    flash_block_q: int = 128        # flash fwd/bwd q-tile rows
+    flash_block_k: int = 128        # flash fwd/bwd kv-tile rows
     fold_adapters: bool = False     # beyond-paper: fold P_up/P_down into the
                                     # adjacent pretrained matmuls at apply time
                                     # (exact; see EXPERIMENTS.md §Perf iter 6)

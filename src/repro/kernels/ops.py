@@ -52,26 +52,78 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return out[..., :hd]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def flash_attention_trainable(q, k, v, causal=True, window=None, softcap=None):
-    """Differentiable wrapper: Pallas kernel forward, oracle-derived backward.
-    (A production TPU deployment pairs this with a backward flash kernel;
-    the reference-vjp backward keeps gradients exact meanwhile.)"""
-    return flash_attention(q, k, v, causal=causal, window=window,
-                           softcap=softcap)
+#: flash-attention train-path implementations: compiled Pallas kernels on
+#: TPU, the tiled pure-JAX fallback elsewhere (interpret-mode Pallas is for
+#: parity tests, not the hot path — same convention as repro.kernels.moe).
+FLASH_IMPLS = ("pallas", "jax")
 
 
-def _fat_fwd(q, k, v, causal, window, softcap):
-    out = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
-    return out, (q, k, v)
+def _flash_impl(impl: Optional[str]) -> str:
+    if impl is not None:
+        assert impl in FLASH_IMPLS, impl
+        return impl
+    return "pallas" if _on_tpu() else "jax"
 
 
-def _fat_bwd(causal, window, softcap, res, ct):
-    from repro.kernels import ref
-    q, k, v = res
-    _, vjp = jax.vjp(lambda a, b, c: ref.flash_attention_ref(
-        a, b, c, causal=causal, window=window, softcap=softcap), q, k, v)
-    return vjp(ct)
+def _fat_fwd_lse(q, k, v, causal, window, softcap, block_q, block_k, impl):
+    """Forward emitting (out, lse) under the selected implementation."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    if _flash_impl(impl) == "jax":
+        return _fa.flash_attention_fwd_jax(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, block_q=block_q)
+    qp, _ = _pad_last(q, 128)
+    kp, _ = _pad_last(k, 128)
+    vp, _ = _pad_last(v, 128)
+    out, lse = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k,
+        interpret=not _on_tpu(), return_lse=True)
+    return out[..., :hd], lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_trainable(q, k, v, causal=True, window=None, softcap=None,
+                              block_q=128, block_k=128, impl=None):
+    """Differentiable flash attention: flash forward AND flash backward.
+
+    Residuals are (q, k, v, o, lse) — O(S) per head; the backward recomputes
+    probability tiles from them (dq pass + dk/dv pass with in-kernel GQA
+    reduction) instead of re-running a dense O(S^2) reference vjp.  ``impl``:
+    None (pallas on TPU, tiled jax elsewhere) | "pallas" | "jax"."""
+    out, _ = _fat_fwd_lse(q, k, v, causal, window, softcap,
+                          block_q, block_k, impl)
+    return out
+
+
+def _fat_fwd(q, k, v, causal, window, softcap, block_q, block_k, impl):
+    out, lse = _fat_fwd_lse(q, k, v, causal, window, softcap,
+                            block_q, block_k, impl)
+    return out, (q, k, v, out, lse)
+
+
+def _fat_bwd(causal, window, softcap, block_q, block_k, impl, res, ct):
+    q, k, v, o, lse = res
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    # delta = rowsum(dO * O): the softmax-jacobian row term, O(S*hd) work
+    delta = jnp.sum(ct.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    if _flash_impl(impl) == "jax":
+        dq, dk, dv = _fa.flash_attention_bwd_jax(
+            q, k, v, lse, delta, ct, causal=causal, window=window,
+            softcap=softcap, scale=scale, block_q=block_q, block_k=block_k)
+    else:
+        qp, _ = _pad_last(q, 128)
+        kp, _ = _pad_last(k, 128)
+        vp, _ = _pad_last(v, 128)
+        dop, _ = _pad_last(ct, 128)
+        dq, dk, dv = _fa.flash_attention_bwd(
+            qp, kp, vp, lse, delta, dop, causal=causal, window=window,
+            softcap=softcap, scale=scale, block_q=block_q, block_k=block_k,
+            interpret=not _on_tpu())
+        dq, dk, dv = dq[..., :hd], dk[..., :hd], dv[..., :hd]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
 flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)

@@ -34,6 +34,19 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return out.reshape(B, H, Sq, hd).astype(q.dtype)
 
 
+def flash_attention_vjp_ref(q, k, v, ct, *, causal: bool = True,
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None):
+    """Dense-reference vjp oracle: (out, (dq, dk, dv)) via ``jax.vjp`` of
+    ``flash_attention_ref``.  This is the O(S^2)-recompute backward the flash
+    backward kernels are parity-tested against (tests/test_flash_grad.py)."""
+    out, vjp = jax.vjp(
+        lambda a, b, c: flash_attention_ref(a, b, c, causal=causal,
+                                            window=window, softcap=softcap),
+        q, k, v)
+    return out, vjp(ct)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

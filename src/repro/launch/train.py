@@ -40,6 +40,10 @@ def main():
                     choices=["einsum", "grouped"],
                     help="override ModelConfig.moe_backend (grouped = "
                          "sort-based dropless dispatch, repro.kernels.moe)")
+    ap.add_argument("--use-flash-kernel", action="store_true",
+                    help="flash attention on the train path (Pallas fwd+bwd "
+                         "kernels on TPU, tiled pure-JAX fallback here; "
+                         "O(S) attention residuals, DESIGN.md §8)")
     args = ap.parse_args()
 
     import jax
@@ -54,6 +58,8 @@ def main():
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.moe_backend is not None:
         cfg = cfg.replace(moe_backend=args.moe_backend)
+    if args.use_flash_kernel:
+        cfg = cfg.replace(use_flash_kernel=True)
     model = Model(cfg)
     print(f"[train] {cfg.name}: {model.num_params() / 1e6:.1f}M params, "
           f"family={cfg.family}, reversible={cfg.reversible}")

@@ -259,6 +259,66 @@ def moe_dispatch_cost(cfg: ModelConfig, batch: int, seq: int,
     }
 
 
+def attention_backward_cost(cfg: ModelConfig, batch: int, seq: int,
+                            causal: bool = True,
+                            window: Optional[int] = None,
+                            block_q: Optional[int] = None,
+                            block_k: Optional[int] = None) -> dict:
+    """Analytic per-attention-layer backward cost for the two backward
+    strategies behind ``flash_attention_trainable`` (DESIGN.md §8):
+
+      ``dense``: the reference-vjp backward — residuals are (q, k, v); the
+      backward re-runs the dense reference under ``jax.vjp``, materialising
+      the f32 (B, H, S, S) score AND probability tensors as transients.
+
+      ``flash``: the flash backward kernels — residuals are (q, k, v, o,
+      lse), O(S) per head; transients are the per-core VMEM tile working set
+      (score/prob/cotangent tiles + row accumulators), independent of S.
+
+    ``window`` defaults to ``cfg.sliding_window``.  FLOPs count MACs*2 of the
+    S x S x hd contractions, scaled by the live-tile fraction for the flash
+    path (dead tiles are skipped; the dense path computes everything).
+    """
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    H, KV, hd, S = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, seq
+    if window is None:
+        window = cfg.sliding_window
+    bq = min(block_q or cfg.flash_block_q, S)
+    bk = min(block_k or cfg.flash_block_k, S)
+
+    q_bytes = batch * H * S * hd * itemsize
+    kv_bytes = batch * KV * S * hd * itemsize
+    scores_f32 = batch * H * S * S * 4
+    mm = 2 * batch * H * S * S * hd          # one full S x S x hd contraction
+
+    # fraction of (bq, bk) tiles that survive dead-tile skipping
+    live = 1.0
+    if causal:
+        live = min(0.5 + bk / (2 * S), 1.0)
+    if window is not None:
+        live = min(live, (window + bq + bk) / S, 1.0)
+
+    dense = {
+        "residual_bytes": q_bytes + 2 * kv_bytes,
+        # recomputed scores + probs (both f32, both alive at once in the vjp)
+        "transient_bytes": 2 * scores_f32,
+        # fwd recompute (2 mm) + dv/dp/dq/dk backward contractions (4 mm)
+        "flops": 6 * mm,
+    }
+    # VMEM tile working set: s/p/dp/ds f32 tiles, q/do/k/v row tiles, the
+    # dq or dk+dv accumulators, lse/delta rows; x2 for pipeline buffering
+    tile_bytes = (4 * bq * bk + 3 * bq * hd + 4 * bk * hd
+                  + 2 * (bq + bk)) * 4 * 2
+    flash = {
+        "residual_bytes": 2 * q_bytes + 2 * kv_bytes + batch * H * S * 4,
+        "transient_bytes": tile_bytes,
+        # dq pass: s/dp/dq (3 mm); dkv pass: s/dv/dp/dk (4 mm); live only
+        "flops": int(7 * mm * live),
+    }
+    return {"seq": S, "batch": batch, "block_q": bq, "block_k": bk,
+            "live_tile_fraction": live, "dense": dense, "flash": flash}
+
+
 def device_memory_stats() -> Optional[dict]:
     """Live allocator stats of device 0 (None on backends without them, e.g.
     CPU) — the runtime cross-check for the static estimates."""

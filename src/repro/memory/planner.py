@@ -50,6 +50,9 @@ class MemoryPlan:
     device_bytes: int                 # trace-checked device peak estimate
     host_bytes: int
     fits: bool
+    # per-attention-layer backward cost (estimator.attention_backward_cost);
+    # None for attention-free families
+    attn_bwd: Optional[dict] = None
 
     def report(self) -> str:
         e = self.est
@@ -69,6 +72,14 @@ class MemoryPlan:
                 f"  {layers:>10}  {pol:<10} "
                 f"{_fmt_gib(n * e.unit_act_bytes[pol])} "
                 f"{_fmt_gib(n * e.unit_host_bytes[pol])}")
+        if self.attn_bwd is not None:
+            d, f = self.attn_bwd["dense"], self.attn_bwd["flash"]
+            lines.append(
+                f"  attn backward/layer: dense-ref transient "
+                f"{d['transient_bytes'] / GiB:.2f} GiB -> flash "
+                f"{f['transient_bytes'] / GiB:.4f} GiB "
+                f"(residuals {d['residual_bytes'] / GiB:.2f} -> "
+                f"{f['residual_bytes'] / GiB:.2f} GiB, use_flash_kernel)")
         verdict = "FITS" if self.fits else (
             f"DOES NOT FIT (over by {(self.device_bytes - self.budget_bytes) / GiB:.2f} GiB"
             + (", try --optimizer lomo" if self.optimizer != "lomo" else "")
@@ -117,6 +128,8 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
     budget = int((budget_gb or cfg.hbm_budget_gb or DEFAULT_BUDGET_GB) * GiB)
     e = estimate or est_mod.estimate(cfg, batch, seq, optimizer=optimizer)
     recompute = "reversible" if cfg.reversible else "remat"
+    attn_bwd = (None if cfg.family == "ssm"
+                else est_mod.attention_backward_cost(cfg, batch, seq))
 
     def cost(policies: List[str]) -> int:
         if not trace_check:
@@ -141,7 +154,7 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
             arch=cfg.name, batch=batch, seq=seq, optimizer=optimizer,
             budget_bytes=budget, policies=policies, est=e,
             device_bytes=device, host_bytes=e.host_total(policies),
-            fits=device <= budget)
+            fits=device <= budget, attn_bwd=attn_bwd)
         if best.fits:
             return best
     return best

@@ -104,22 +104,23 @@ def attention(p, cfg: ModelConfig, xq, xkv, *,
         positions_k = jnp.broadcast_to(jnp.arange(k.shape[1], dtype=jnp.int32)[None],
                                        (B, k.shape[1]))
 
-    # Pallas flash-attention backend (train path only: no cache, static
-    # window, contiguous 0..S positions — which is what the train/prefill
-    # callers pass).  On CPU interpret=True lowers the kernel body to plain
-    # jax ops, so jax.vjp inside the reversible stack differentiates through
-    # it; on TPU pair it with a custom backward kernel before enabling for
-    # training at scale.
+    # Flash-attention backend (train path only: no cache, static window,
+    # contiguous 0..S positions — which is what the train/prefill callers
+    # pass).  Fully differentiable: flash_attention_trainable pairs the flash
+    # forward with the flash backward kernels (residuals q,k,v,o,lse — no
+    # O(S^2) recompute), so jax.vjp inside the reversible stack stays O(S).
     if (cfg.use_flash_kernel and cache is None
             and isinstance(window, (int, type(None)))):
         from repro.kernels import ops as kops
-        bq = min(128, Sq)
-        if Sq % bq == 0 and k.shape[1] % min(128, k.shape[1]) == 0:
+        bq = min(cfg.flash_block_q, Sq)
+        bk = min(cfg.flash_block_k, k.shape[1])
+        if Sq % bq == 0 and k.shape[1] % bk == 0:
             q4 = q.transpose(0, 2, 1, 3)
             k4 = k.transpose(0, 2, 1, 3)
             v4 = v.transpose(0, 2, 1, 3)
             out = kops.flash_attention_trainable(
-                q4, k4, v4, causal, window, cfg.logit_softcap)
+                q4, k4, v4, causal, window, cfg.logit_softcap,
+                cfg.flash_block_q, cfg.flash_block_k)
             out = out.transpose(0, 2, 1, 3).reshape(B, Sq, H * hd)
             out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
             return out

@@ -40,6 +40,10 @@ class ServingEngine:
         self.params = params
         self.slots = slots
         self.buf_len = buf_len
+        # kept for admission: fresh per-slot caches must be rebuilt with the
+        # same extras (e.g. encoder output / image features feeding
+        # cross-attention caches), not from tokens alone
+        self.extras = extras
         # stacked per-slot caches: leading axis = slot, each slot batch=1
         one = model.init_cache(params, 1, buf_len, extras=extras)
         self.cache = jax.tree_util.tree_map(
@@ -72,7 +76,8 @@ class ServingEngine:
             if self.active[s] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            fresh = self.model.init_cache(self.params, 1, self.buf_len)
+            fresh = self.model.init_cache(self.params, 1, self.buf_len,
+                                          extras=self.extras)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, fresh = self._prefill(self.params, fresh, prompt)
             tok = jnp.argmax(logits[:, -1:], axis=-1)

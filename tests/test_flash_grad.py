@@ -1,0 +1,166 @@
+"""Gradient-parity harness for the flash-attention backward subsystem.
+
+``flash_attention_trainable`` (flash forward + flash backward from (q, k, v,
+o, lse) residuals) vs the dense-reference vjp oracle
+(``ref.flash_attention_vjp_ref``), across the full option grid: causal /
+non-causal, sliding window, softcap, GQA, head dims not divisible by 128 and
+non-default block shapes — for both the tiled pure-JAX fallback and the
+Pallas kernels in interpret mode.  Plus the residual-layout guarantee (no
+(S, S) tensor in the vjp) and end-to-end ``jax.grad`` through ``Model.loss``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, st
+from repro.kernels import ops, ref
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _qkv(B, H, KV, S, hd, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    ct = jax.random.normal(ks[3], (B, H, S, hd))
+    return q, k, v, ct
+
+
+def _assert_parity(B, H, KV, S, hd, *, causal=True, window=None, softcap=None,
+                   block_q=128, block_k=128, impl=None, seed=0):
+    q, k, v, ct = _qkv(B, H, KV, S, hd, seed)
+    out, vjp = jax.vjp(
+        lambda a, b, c: ops.flash_attention_trainable(
+            a, b, c, causal, window, softcap, block_q, block_k, impl),
+        q, k, v)
+    want_o, want_g = ref.flash_attention_vjp_ref(
+        q, k, v, ct, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_o), **TOL)
+    for name, a, b in zip(("dq", "dk", "dv"), vjp(ct), want_g):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   err_msg=name, **TOL)
+
+
+# ------------------------------------------------------- option grid (jax impl)
+
+@given(case=st.sampled_from([
+    (1, 4, 4, 128, 64),       # MHA
+    (2, 8, 2, 128, 64),       # GQA 4:1
+    (1, 4, 1, 256, 32),       # MQA
+]), causal=st.sampled_from([True, False]))
+@settings(max_examples=6, deadline=None)
+def test_grad_parity_shapes(case, causal):
+    B, H, KV, S, hd = case
+    _assert_parity(B, H, KV, S, hd, causal=causal)
+
+
+@given(window=st.sampled_from([32, 128]),
+       softcap=st.sampled_from([None, 30.0]))
+@settings(max_examples=4, deadline=None)
+def test_grad_parity_window_softcap(window, softcap):
+    _assert_parity(1, 4, 2, 256, 64, causal=True, window=window,
+                   softcap=softcap, seed=1)
+
+
+def test_grad_parity_noncausal_softcap():
+    _assert_parity(2, 4, 4, 128, 64, causal=False, softcap=50.0, seed=2)
+
+
+@pytest.mark.parametrize("hd", [80, 96])
+def test_grad_parity_head_dim_not_128_multiple(hd):
+    _assert_parity(1, 4, 2, 128, hd, causal=True, seed=3)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 32), (32, 128)])
+def test_grad_parity_block_shapes(block_q, block_k):
+    _assert_parity(1, 2, 2, 256, 64, causal=True, window=96,
+                   block_q=block_q, block_k=block_k, seed=4)
+
+
+# -------------------------------------------- Pallas kernels (interpret mode)
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=True),
+    dict(causal=True, window=32),
+    dict(causal=False, softcap=30.0),
+    dict(causal=True, window=64, softcap=50.0, block_q=64, block_k=32),
+])
+def test_grad_parity_pallas_interpret(kw):
+    _assert_parity(1, 4, 2, 128, 64, impl="pallas", seed=5, **kw)
+
+
+def test_grad_parity_pallas_gqa_odd_head_dim():
+    _assert_parity(1, 8, 2, 128, 80, impl="pallas", causal=True, seed=6)
+
+
+def test_pallas_and_jax_impls_agree():
+    """The two production implementations agree with each other bit-tightly
+    (same tile math) — not just both within oracle tolerance."""
+    q, k, v, ct = _qkv(1, 4, 2, 128, 64, seed=7)
+    grads = {}
+    for impl in ops.FLASH_IMPLS:
+        out, vjp = jax.vjp(
+            lambda a, b, c, i=impl: ops.flash_attention_trainable(
+                a, b, c, True, 32, None, 128, 128, i), q, k, v)
+        grads[impl] = (out,) + vjp(ct)
+    for a, b in zip(grads["pallas"], grads["jax"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------ residual layout
+
+def test_vjp_residuals_are_linear_in_seq():
+    """The trainable backward stores exactly (q, k, v, o, lse) — no (S, S)
+    tensor anywhere in the vjp closure (jax.eval_shape; nothing allocated)."""
+    B, H, KV, S, hd = 1, 4, 2, 256, 64
+    q = jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32)
+    k = jax.ShapeDtypeStruct((B, KV, S, hd), jnp.float32)
+    v = jax.ShapeDtypeStruct((B, KV, S, hd), jnp.float32)
+
+    def residuals(q, k, v):
+        _, vjp_fn = jax.vjp(
+            lambda a, b, c: ops.flash_attention_trainable(a, b, c), q, k, v)
+        return tuple(leaf for leaf in jax.tree_util.tree_leaves(vjp_fn)
+                     if hasattr(leaf, "shape"))
+    leaves = jax.eval_shape(residuals, q, k, v)
+    assert leaves, "vjp closure carried no residual arrays"
+    for leaf in leaves:
+        assert sum(1 for d in leaf.shape if d == S) < 2, (
+            f"O(S^2) residual {leaf.shape} leaked into the flash vjp")
+    total = sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves)
+    expect = (2 * B * H * S * hd * 4          # q, o
+              + 2 * B * KV * S * hd * 4       # k, v
+              + B * H * S * 4)                # lse
+    assert total <= expect, (total, expect)
+
+
+# ------------------------------------------------------------- end to end
+
+def _grad_parity_model(arch, seq, **cfg_overrides):
+    from repro.configs.base import get_config
+    from repro.models.model import Model
+    cfg = get_config(arch, reduced=True).replace(
+        num_layers=2, attn_q_chunk=0, **cfg_overrides)
+    m_jnp = Model(cfg)
+    m_fl = Model(cfg.replace(use_flash_kernel=True))
+    params = m_jnp.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, seq), 0,
+                              cfg.vocab_size)
+    g1 = jax.grad(lambda p: m_jnp.loss(p, {"tokens": toks}))(params)
+    g2 = jax.grad(lambda p: m_fl.loss(p, {"tokens": toks}))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_model_loss_grad_causal_only():
+    # danube minus its sliding window = plain causal GQA attention
+    _grad_parity_model("h2o-danube-1.8b", 128, sliding_window=None)
+
+
+def test_model_loss_grad_sliding_window():
+    _grad_parity_model("h2o-danube-1.8b", 128)   # reduced window = 64

@@ -108,6 +108,35 @@ def test_fixed_act_is_policy_aware(setup):
     assert abs(lin - traced) <= 0.10 * max(traced, 1), (lin, traced)
 
 
+def test_attention_backward_cost_flash_transients_flat_in_seq():
+    """Flash backward transients are the VMEM tile working set — they must
+    NOT scale with S^2 (or S at all once S >= the block sizes), while the
+    dense-ref recompute quadruples when S doubles; flash residuals stay
+    linear in S and the gate quantity (flash transient < dense transient)
+    holds at the benchmark's S=1024."""
+    cfg = get_config("h2o-danube-1.8b")
+    c1 = est_mod.attention_backward_cost(cfg, batch=8, seq=1024)
+    c2 = est_mod.attention_backward_cost(cfg, batch=8, seq=2048)
+    assert c1["flash"]["transient_bytes"] == c2["flash"]["transient_bytes"]
+    assert c2["dense"]["transient_bytes"] == 4 * c1["dense"]["transient_bytes"]
+    assert c2["flash"]["residual_bytes"] == 2 * c1["flash"]["residual_bytes"]
+    assert c1["flash"]["transient_bytes"] < c1["dense"]["transient_bytes"]
+
+
+def test_attention_backward_cost_surfaces_in_plan_report():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    p = plan(cfg, budget_gb=1000.0, batch=2, seq=32, optimizer="adamw",
+             trace_check=False)
+    assert p.attn_bwd is not None
+    assert "attn backward/layer" in p.report()
+    # attention-free families carry no attention line
+    cfg_ssm = get_config("rwkv6-3b", reduced=True)
+    p_ssm = plan(cfg_ssm, budget_gb=1000.0, batch=2, seq=32,
+                 optimizer="adamw", trace_check=False)
+    assert p_ssm.attn_bwd is None
+    assert "attn backward/layer" not in p_ssm.report()
+
+
 def test_encdec_policy_list_covers_decoder_only():
     """On enc-dec configs a policy list plans the decoder; the encoder keeps
     the O(1) reversible default (it must NOT silently absorb the list)."""

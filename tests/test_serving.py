@@ -67,6 +67,41 @@ def test_engine_more_requests_than_slots(small_model):
     assert all(len(r.generated) == 3 for r in done.values())
 
 
+def test_admission_rebuilds_cache_with_extras():
+    """Regression: `_admit` used to call init_cache WITHOUT the extras the
+    engine was constructed with, so extras-dependent caches (whisper's
+    cross-attention K/V from the encoder output) were silently rebuilt from
+    nothing on admission.  Engine output must match per-sequence decode with
+    the same extras."""
+    cfg = get_config("whisper-medium", reduced=True).replace(
+        num_layers=2, num_encoder_layers=2)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    extras = {"enc_feats": jax.random.normal(
+        jax.random.PRNGKey(7), (1, cfg.encoder_seq_len, cfg.d_model))}
+
+    eng = ServingEngine(model, params, slots=1, buf_len=32, extras=extras)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(4, cfg.vocab_size, size=5).astype(np.int32)
+               for _ in range(2)]
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+    done = eng.run()
+    assert sorted(done) == [0, 1]
+
+    for uid, p in enumerate(prompts):
+        cache = model.init_cache(params, 1, 32, extras=extras)
+        lg, cache = model.decode_step(params, cache,
+                                      jnp.asarray(p, jnp.int32)[None])
+        tok = jnp.argmax(lg[:, -1:], -1)
+        want = [int(tok[0, 0])]
+        for _ in range(3):
+            lg, cache = model.decode_step(params, cache, tok)
+            tok = jnp.argmax(lg[:, -1:], -1)
+            want.append(int(tok[0, 0]))
+        assert done[uid].generated == want, uid
+
+
 def test_async_checkpointer(tmp_path):
     ck = AsyncCheckpointer(str(tmp_path), keep=2)
     tree = {"w": jnp.arange(100.0)}
