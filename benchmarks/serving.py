@@ -1,0 +1,295 @@
+"""Serving benchmark: continuous-batching engine under Poisson arrivals.
+
+Measures the overhauled ``ServingEngine`` (length-bucketed batched prefill,
+on-device sampling/termination, drain every k steps) on a mixed
+prompt-length / generation-length workload with Poisson arrivals, against
+the pre-overhaul per-step-sync engine (host argmax + device round-trip every
+step, per-request prefill that recompiles per prompt length), reimplemented
+here verbatim as ``_LegacyEngine``.
+
+Written to BENCH_serving.json, with three gates:
+
+  * **zero recompiles after warmup**: the engine's jitted entry points
+    (fused decode+sample step, bucketed prefill+admit) compile nothing new
+    across the whole mixed-length main run — asserted via jit cache stats;
+  * **sampled decode matches greedy at temperature=0**: the on-device
+    sampling path at zero temperature reproduces the host-argmax reference
+    token-for-token;
+  * **throughput**: engine tok/s >= the legacy engine on the same workload
+    (small tolerance for host timer noise).
+
+    PYTHONPATH=src python benchmarks/serving.py [--quick] \
+        [--out BENCH_serving.json] [--arch h2o-danube-1.8b]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from collections import deque
+
+import numpy as np
+
+
+# ----------------------------------------------------- pre-overhaul engine
+
+class _LegacyEngine:
+    """The pre-overhaul engine, kept for the throughput gate: greedy-argmax
+    only, one host sync per decode step, and a prefill jit that recompiles
+    for every distinct prompt length."""
+
+    def __init__(self, model, params, *, slots=4, buf_len=256, extras=None):
+        import jax
+        import jax.numpy as jnp
+        self.jax, self.jnp = jax, jnp
+        self.model, self.params = model, params
+        self.slots, self.buf_len, self.extras = slots, buf_len, extras
+        one = model.init_cache(params, 1, buf_len, extras=extras)
+        self.cache = jax.tree_util.tree_map(
+            lambda a: jnp.stack([a] * slots), one)
+        self.active = [None] * slots
+        self.queue = deque()
+        self.done = {}
+        self.last_tok = jnp.zeros((slots, 1, 1), jnp.int32)
+        self._decode = jax.jit(jax.vmap(
+            lambda c, t: model.decode_step(params, c, t)))
+        self._prefill = jax.jit(model.decode_step)
+
+    def submit(self, req):
+        req.generated = []
+        self.queue.append(req)
+
+    def _admit(self):
+        jax, jnp = self.jax, self.jnp
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            fresh = self.model.init_cache(self.params, 1, self.buf_len,
+                                          extras=self.extras)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, fresh = self._prefill(self.params, fresh, prompt)
+            tok = jnp.argmax(logits[:, -1:], axis=-1)
+            self.cache = jax.tree_util.tree_map(
+                lambda stacked, single: jax.lax.dynamic_update_slice(
+                    stacked, single[None].astype(stacked.dtype),
+                    (s,) + (0,) * single.ndim),
+                self.cache, fresh)
+            self.active[s] = req
+            self.last_tok = self.last_tok.at[s, 0, 0].set(tok[0, 0])
+            req.generated.append(int(tok[0, 0]))
+
+    def step(self):
+        jax, jnp = self.jax, self.jnp
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.cache = self._decode(self.cache, self.last_tok)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))
+        new_last = np.asarray(self.last_tok).copy()
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.generated.append(tok)
+            new_last[s, 0, 0] = tok
+            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+                self.done[req.uid] = req
+                self.active[s] = None
+        self.last_tok = jnp.asarray(new_last)
+        return sum(1 for r in self.active if r is not None)
+
+    def run(self, max_steps=10_000):
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.done
+
+
+# ------------------------------------------------------------- workload
+
+@dataclasses.dataclass
+class Workload:
+    arrivals: list          # seconds offsets (Poisson)
+    prompts: list           # np arrays
+    gens: list              # max_new_tokens per request
+    temperature: float
+
+
+def make_workload(cfg, *, n, rate_hz, pmin, pmax, gmin, gmax, temperature,
+                  seed=0):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n)).tolist()
+    prompts = [rng.integers(4, cfg.vocab_size,
+                            size=int(rng.integers(pmin, pmax + 1)))
+               .astype(np.int32) for _ in range(n)]
+    gens = [int(rng.integers(gmin, gmax + 1)) for _ in range(n)]
+    return Workload(arrivals, prompts, gens, temperature)
+
+
+def _requests(wl, make_req):
+    return [make_req(uid=i, prompt=wl.prompts[i], max_new_tokens=wl.gens[i])
+            for i in range(len(wl.prompts))]
+
+
+def drive(eng, wl, reqs, steps_per_call=1):
+    """Submit per Poisson arrival times, step until drained.  Returns
+    (wall_s, token_latencies_s, request_latencies_s, n_tokens)."""
+    pending = deque(zip(wl.arrivals, reqs))
+    submit_t, done_t = {}, {}
+    tok_lat = []
+    t0 = time.perf_counter()
+
+    def produced():
+        n = sum(len(r.generated) for r in eng.done.values())
+        return n + sum(len(r.generated) for r in eng.active if r is not None)
+
+    while pending or eng.queue or any(r is not None for r in eng.active):
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            at, req = pending.popleft()
+            submit_t[req.uid] = time.perf_counter()
+            eng.submit(req)
+        if (not eng.queue and not any(r is not None for r in eng.active)
+                and pending):
+            time.sleep(min(0.01, max(0.0,
+                                     pending[0][0] - (time.perf_counter() - t0))))
+            continue
+        before = produced()
+        ws = time.perf_counter()
+        eng.step()
+        we = time.perf_counter()
+        new = produced() - before
+        if new > 0:
+            tok_lat.extend([(we - ws) / steps_per_call] * new)
+        for uid in eng.done:
+            if uid not in done_t:
+                done_t[uid] = we
+    wall = time.perf_counter() - t0
+    req_lat = [done_t[u] - submit_t[u] for u in done_t]
+    return wall, tok_lat, req_lat, produced()
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+# ------------------------------------------------------------------ main
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload (CI)")
+    ap.add_argument("--slots", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.models.model import Model
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config(args.arch, reduced=True).replace(num_layers=2)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    slots = args.slots or (2 if args.quick else 4)
+    n_req = 8 if args.quick else 24
+    gmax = 6 if args.quick else 16
+    pmax = 24 if args.quick else 48
+    buf = 96
+    wl = make_workload(cfg, n=n_req, rate_hz=6.0, pmin=4, pmax=pmax,
+                       gmin=2, gmax=gmax, temperature=0.7, seed=1)
+
+    eng = ServingEngine(model, params, slots=slots, buf_len=buf,
+                        drain_every=4)
+
+    # ---- warmup: touch every bucket in the workload, then freeze jit stats
+    buckets = sorted({eng._bucket(p.size) for p in wl.prompts})
+    for i, b in enumerate(buckets):
+        eng.submit(Request(uid=10_000 + i,
+                           prompt=np.arange(4, 4 + b, dtype=np.int32) % 64 + 4,
+                           max_new_tokens=2, eos_id=-1, temperature=0.5,
+                           seed=i))
+    eng.run()
+    eng.done.clear()
+    warm_jit = eng.jit_cache_sizes()
+
+    # ---- main run: Poisson arrivals, mixed lengths, sampled decode
+    reqs = _requests(wl, lambda uid, prompt, max_new_tokens: Request(
+        uid=uid, prompt=prompt, max_new_tokens=max_new_tokens, eos_id=-1,
+        temperature=wl.temperature, top_k=40, top_p=0.95, seed=uid))
+    wall, tok_lat, req_lat, n_tok = drive(eng, wl, reqs,
+                                          steps_per_call=eng.drain_every)
+    final_jit = eng.jit_cache_sizes()
+    recompiles = sum(final_jit.values()) - sum(warm_jit.values())
+
+    # ---- legacy engine on the same workload, greedy (it has no sampler)
+    leg = _LegacyEngine(model, params, slots=slots, buf_len=buf)
+    leg.submit(Request(uid=99_999, prompt=wl.prompts[0][:4],
+                       max_new_tokens=2, eos_id=-1))
+    leg.run()
+    leg.done.clear()
+    leg_reqs = _requests(wl, lambda uid, prompt, max_new_tokens: Request(
+        uid=uid, prompt=prompt, max_new_tokens=max_new_tokens, eos_id=-1))
+    leg_wall, _, _, leg_tok = drive(leg, wl, leg_reqs)
+
+    # ---- parity: engine at temperature=0 == host-argmax greedy reference
+    parity_ok = True
+    for uid in (0, 1):
+        p = wl.prompts[uid]
+        eng.submit(Request(uid=20_000 + uid, prompt=p, max_new_tokens=5,
+                           eos_id=-1, temperature=0.0))
+        got = eng.run()[20_000 + uid].generated
+        cache = model.init_cache(params, 1, buf)
+        lg, cache = model.decode_step(params, cache,
+                                      jnp.asarray(p, jnp.int32)[None])
+        tok = jnp.argmax(lg[:, -1:], -1)
+        want = [int(tok[0, 0])]
+        for _ in range(4):
+            lg, cache = model.decode_step(params, cache, tok)
+            tok = jnp.argmax(lg[:, -1:], -1)
+            want.append(int(tok[0, 0]))
+        parity_ok &= got == want
+
+    tok_s = n_tok / wall
+    leg_tok_s = leg_tok / leg_wall
+    result = {
+        "arch": args.arch,
+        "workload": {"requests": n_req, "slots": slots, "buf_len": buf,
+                     "prompt_len": [4, pmax], "gen": [2, gmax],
+                     "rate_hz": 6.0, "temperature": wl.temperature,
+                     "buckets": buckets},
+        "engine": {"tok_s": tok_s, "wall_s": wall, "tokens": n_tok,
+                   "token_lat_p50_ms": _pct(tok_lat, 50) * 1e3,
+                   "token_lat_p99_ms": _pct(tok_lat, 99) * 1e3,
+                   "request_lat_p50_ms": _pct(req_lat, 50) * 1e3,
+                   "request_lat_p99_ms": _pct(req_lat, 99) * 1e3,
+                   "jit_cache_warm": warm_jit, "jit_cache_final": final_jit},
+        "legacy": {"tok_s": leg_tok_s, "wall_s": leg_wall,
+                   "tokens": leg_tok},
+        "gates": {"recompiles_after_warmup": recompiles,
+                  "greedy_parity_ok": bool(parity_ok),
+                  "throughput_ratio": tok_s / leg_tok_s},
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print(f"[serving] engine {tok_s:.1f} tok/s "
+          f"(p50 {result['engine']['token_lat_p50_ms']:.0f} ms, "
+          f"p99 {result['engine']['token_lat_p99_ms']:.0f} ms/token) | "
+          f"legacy {leg_tok_s:.1f} tok/s | "
+          f"recompiles after warmup: {recompiles} | "
+          f"greedy parity: {parity_ok}")
+    print(f"wrote {args.out}")
+
+    ok = recompiles == 0 and parity_ok and tok_s >= leg_tok_s
+    if not ok:
+        print(f"[FAIL] gates: {result['gates']}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -75,7 +75,16 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
 
 
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(d for d in os.listdir(ckpt_dir)
+    entries = os.listdir(ckpt_dir)
+    # stale .tmp dirs: a crash between os.makedirs(tmp) and os.replace leaves
+    # them behind and they are never a valid checkpoint.  The current save's
+    # tmp no longer exists by the time _gc runs (os.replace already published
+    # it), and the writer is single-process per directory (AsyncCheckpointer
+    # keeps at most one save in flight), so anything matching here is orphaned.
+    for d in entries:
+        if d.startswith("step_") and d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    steps = sorted(d for d in entries
                    if d.startswith("step_") and not d.endswith(".tmp"))
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, d))

@@ -147,6 +147,10 @@ def batch_pspec(mesh: Mesh, batch_size: int, ndim: int = 2,
     sequence sharding (dim 1) for batch-1 long-context shapes (only when that
     dim is divisible too — a (1,1) decode token stays replicated)."""
     fa = data_axes(mesh)
+    if not fa:
+        # model-only TP mesh (e.g. SERVE_TP_ONLY serving pods): nothing to
+        # shard the batch over — replicate instead of indexing an empty tuple
+        return P()
     sz = _axis_size(mesh, fa)
     faxis = fa if len(fa) > 1 else fa[0]
     if batch_size % sz == 0:
@@ -165,7 +169,9 @@ def cache_pspecs(cache_shapes, mesh: Mesh, batch_size: int,
     every decode step: the "involuntary full rematerialization" trap)."""
     fa = data_axes(mesh)
     fsz = _axis_size(mesh, fa)
-    faxis = fa if len(fa) > 1 else fa[0]
+    # model-only TP mesh: no data axes to place the batch on — keep faxis
+    # None and let the kv-heads / "model" fallback below do the sharding
+    faxis = (fa if len(fa) > 1 else fa[0]) if fa else None
     msz = mesh.shape.get("model", 1)
 
     def one(sds):
@@ -173,19 +179,21 @@ def cache_pspecs(cache_shapes, mesh: Mesh, batch_size: int,
         if not shape:
             return P()
         out = [None] * len(shape)
-        used_f = False
-        # stacked cache leaves: (n_units, B, seq, kv, hd) or (B, seq, ...) etc.
-        # find batch dim: first dim equal to batch_size after the stack dim
-        for i, d in enumerate(shape):
-            if d == batch_size and batch_size % fsz == 0:
-                out[i] = faxis
-                used_f = True
-                break
-        if not used_f:
-            # shard the largest dim over the data axes (the sequence buffer)
-            big = max(range(len(shape)), key=lambda i: shape[i])
-            if shape[big] % fsz == 0 and shape[big] >= fsz * 8:
-                out[big] = faxis
+        if faxis is not None:
+            used_f = False
+            # stacked cache leaves: (n_units, B, seq, kv, hd) or (B, seq, ...)
+            # etc.  find batch dim: first dim equal to batch_size after the
+            # stack dim
+            for i, d in enumerate(shape):
+                if d == batch_size and batch_size % fsz == 0:
+                    out[i] = faxis
+                    used_f = True
+                    break
+            if not used_f:
+                # shard the largest dim over the data axes (the sequence buffer)
+                big = max(range(len(shape)), key=lambda i: shape[i])
+                if shape[big] % fsz == 0 and shape[big] >= fsz * 8:
+                    out[big] = faxis
         if kv_heads and msz > 1 and kv_heads % msz == 0:
             for i, d in enumerate(shape):
                 if out[i] is None and d == kv_heads:

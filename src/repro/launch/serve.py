@@ -1,8 +1,12 @@
-"""Serving launcher: batched prefill + decode with KV / SSM-state caches.
+"""Serving launcher: continuous-batching engine with on-device sampling.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
-        [--no-reduced] [--batch 4] [--prompt-len 32] [--gen 32]
+        [--no-reduced] [--requests 16] [--slots 4] [--gen 32] \
+        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--drain-every 4]
 
+Submits ``--requests`` requests with mixed prompt lengths to a
+``ServingEngine`` (length-bucketed batched prefill, per-request seeded
+sampling, EOS/length termination on device) and reports throughput.
 Reduced (smoke-scale) configs are the default on this CPU container;
 ``--no-reduced`` serves the full config (real accelerator only).
 """
@@ -19,42 +23,60 @@ def main():
     # (--reduced used to be store_true with default=True: a no-op flag)
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
                     default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length (prompts are mixed 4..this)")
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--buf-len", type=int, default=0,
+                    help="cache buffer (0 -> prompt-len + gen)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--drain-every", type=int, default=4)
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
+    import numpy as np
     from repro.configs.base import get_config
     from repro.models.model import Model
+    from repro.serving.engine import Request, ServingEngine
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    B, P = args.batch, args.prompt_len
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 4,
-                                 cfg.vocab_size)
     extras = None
     if cfg.family == "encdec":
         extras = {"enc_feats": jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.encoder_seq_len, cfg.d_model))}
+            jax.random.PRNGKey(2), (1, cfg.encoder_seq_len, cfg.d_model))}
     if cfg.family == "vlm":
         extras = {"img": jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.num_image_tokens, cfg.d_model))}
+            jax.random.PRNGKey(2), (1, cfg.num_image_tokens, cfg.d_model))}
 
-    cache = model.init_cache(params, B, P + args.gen, extras=extras)
-    logits, cache = model.decode_step(params, cache, prompts)
-    tok = jnp.argmax(logits[:, -1:], -1)
-    step = jax.jit(model.decode_step)
-    t0, n = time.perf_counter(), 0
-    for _ in range(args.gen - 1):
-        logits, cache = step(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1:], -1)
-        n += B
-    jax.block_until_ready(tok)
-    print(f"[serve] {args.arch}: {n / (time.perf_counter() - t0):.1f} tok/s "
-          f"(batch={B})")
+    buf = args.buf_len or (args.prompt_len + args.gen)
+    eng = ServingEngine(model, params, slots=args.slots, buf_len=buf,
+                        extras=extras, drain_every=args.drain_every)
+
+    rng = np.random.default_rng(0)
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, max(5, args.prompt_len + 1)))
+        prompt = rng.integers(4, cfg.vocab_size, size=plen).astype(np.int32)
+        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.gen,
+                           eos_id=-1, temperature=args.temperature,
+                           top_k=args.top_k, top_p=args.top_p, seed=uid))
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in done.values())
+    print(f"[serve] {args.arch}: {len(done)} requests, {n_tok} tokens, "
+          f"{n_tok / dt:.1f} tok/s (slots={args.slots}, "
+          f"drain_every={args.drain_every}, "
+          f"temperature={args.temperature}, top_k={args.top_k}, "
+          f"top_p={args.top_p})")
+    print(f"[serve] jit cache: {eng.jit_cache_sizes()}")
+    sample = done[0].generated[:12]
+    print(f"[serve] request 0 tokens: {sample}")
 
 
 if __name__ == "__main__":

@@ -85,7 +85,12 @@ def main():
                                 batch=per_dev,
                                 seq=args.seq, optimizer=args.optimizer)
     _, _, losses = train(model, opt, dc, rc, plan=memory_plan)
-    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if losses:
+        print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    else:
+        # resume-from-latest found a checkpoint at/past --steps: no new steps
+        print(f"[train] done: nothing to do (checkpoint in {args.ckpt_dir} "
+              f"already at step >= {args.steps})")
 
 
 if __name__ == "__main__":

@@ -279,6 +279,17 @@ def cross_attention_decode(p, cfg: ModelConfig, xq, kv_cache):
     return jnp.einsum("bsk,kd->bsd", out, p["wo"])
 
 
+# ---------------------------------------------------------------- LM head
+
+def lm_head_logits(h, w, cap: Optional[float] = None):
+    """Vocabulary logits from final hidden states.  ``h``: (..., d) — any
+    leading shape (the serving engine feeds (slots, d) single positions so the
+    fused decode+sample step never materialises per-position logits it will
+    not read)."""
+    logits = jnp.einsum("...d,dv->...v", h, w)
+    return softcap(logits, cap)
+
+
 # ---------------------------------------------------------------- MLP
 
 def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:

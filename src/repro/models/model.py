@@ -34,8 +34,8 @@ from repro.core.reversible import (chain, coupling, make_coupled, merge_streams,
 from repro.models import common, moe as moe_lib, spec, ssm as ssm_lib
 from repro.models.common import (attention, attention_decode, attn_specs,
                                  cross_attention_decode, cross_kv,
-                                 init_kv_cache, mlp, mlp_specs, norm_spec,
-                                 rms_norm, softcap)
+                                 init_kv_cache, lm_head_logits, mlp, mlp_specs,
+                                 norm_spec, rms_norm, softcap)
 from repro.models.spec import ParamSpec
 
 BIG_WINDOW = 1 << 30
@@ -751,13 +751,15 @@ class Model:
 
     def forward(self, params, tokens, extras=None, save_memory=True):
         h = self.hidden(params, tokens, extras, save_memory)
-        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
-        return softcap(logits, self.cfg.final_softcap)
+        return self.lm_logits(params, h)
+
+    def lm_logits(self, params, h):
+        """LM-head logits from final-normed hidden states (any leading shape)."""
+        return lm_head_logits(h, params["lm_head"], self.cfg.final_softcap)
 
     def _nll(self, params, h, tgt):
         """Per-position nll from final hidden states (chunk-sized)."""
-        lg = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
-        lg = softcap(lg, self.cfg.final_softcap).astype(jnp.float32)
+        lg = self.lm_logits(params, h).astype(jnp.float32)
         lse = jax.nn.logsumexp(lg, axis=-1)
         gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
         return lse - gold
@@ -824,9 +826,13 @@ class Model:
                 params["stacks"][s.name])
         return caches
 
-    def decode_step(self, params, cache, token):
-        """token: (B, Sq) — Sq=1 for decode, Sq=S for (non-rolling) prefill.
-        Returns (logits (B, Sq, V), new_cache)."""
+    def decode_step_hidden(self, params, cache, token):
+        """Decode/prefill step up to the final norm — the hook the serving
+        engine fuses sampling onto.  token: (B, Sq) — Sq=1 for decode, Sq=S
+        for (non-rolling) prefill.  Returns (h (B, Sq, d), new_cache); callers
+        that only need one position (batched bucketed prefill reads the last
+        real position per row) gather from ``h`` and apply ``lm_logits`` there
+        instead of materialising (B, Sq, V) logits."""
         cfg = self.cfg
         B, Sq = token.shape
         t = cache["t"]
@@ -850,6 +856,10 @@ class Model:
                 body, (x1, x2), (idxs, params["stacks"][s.name], cache[s.name]))
             new_cache[s.name] = ncache
         h = rms_norm(merge_streams(x1, x2), params["final_norm"], cfg.norm_eps)
-        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
-        logits = softcap(logits, cfg.final_softcap)
-        return logits, new_cache
+        return h, new_cache
+
+    def decode_step(self, params, cache, token):
+        """token: (B, Sq) — Sq=1 for decode, Sq=S for (non-rolling) prefill.
+        Returns (logits (B, Sq, V), new_cache)."""
+        h, new_cache = self.decode_step_hidden(params, cache, token)
+        return self.lm_logits(params, h), new_cache

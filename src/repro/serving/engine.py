@@ -1,17 +1,41 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine: batched bucketed prefill, on-device
+sampling and termination, host drains every k steps.
 
 Production pattern mapped to JAX: a fixed number of decode SLOTS, each with
-its own cache tree and position counter, batched by vmap — so every slot
-tracks its own `t` (rope positions and cache writes stay correct under
-staggered admission, unlike a shared global counter).  Each engine step
-decodes all slots in one jitted vmapped call; finished sequences (EOS or
-max-new-tokens) free their slot and queued requests are prefilled into free
-slots by splicing a freshly prefilled single-sequence cache into the stacked
-slot axis (dynamic_update_slice — admission never recompiles).
+its own cache tree and position counter, batched by vmap — every slot tracks
+its own ``t`` so rope positions and cache writes stay correct under staggered
+admission.  Three design points (DESIGN.md §9):
+
+* **On-device sampling/termination** (`repro.serving.sampling`): each engine
+  step decodes all slots AND samples the next token per slot (temperature /
+  top-k / top-p, greedy at zero temperature, per-request seeded keys) inside
+  one jitted call; EOS and token-budget termination also run on device.  The
+  host never syncs per step — it drains the device-side output buffers every
+  ``drain_every`` steps (one transfer), so decode dispatch is free of the
+  per-step ``argmax`` + host round-trip the old engine paid.
+
+* **Length-bucketed batched prefill**: queued requests are padded to
+  power-of-two length buckets and prefilled together in one vmapped call over
+  the slot axis — admission compiles once per bucket, never per prompt
+  length, and a backlog drains in O(buckets) compiled calls.  Padding is
+  causal-masked out during prefill; afterwards the padded cache entries are
+  invalidated (`pos -> -1`) and the slot's ``t`` is set to the real prompt
+  length, so decode numerics match an unpadded per-sequence prefill exactly.
+  Families with recurrent state (ssm / hybrid) cannot absorb padding tokens
+  (the state integrates them), so they bucket by exact length instead —
+  still batched across same-length prompts.
+
+* **Whole-tree slot splice**: prefill runs under the same per-slot vmap
+  layout as decode (leading slot axis on every cache leaf), so admission is
+  a single ``jnp.where`` over the cache tree with the admitted-slot mask —
+  no per-leaf axis bookkeeping, no dynamic-update recompiles.
 
 Rolling-window / SSM-state caches work unchanged (the cache tree is whatever
-Model.init_cache builds).  Admission is strictly FIFO; a request longer than
-the cache buffer is rejected at submit time.
+``Model.init_cache`` builds).  Admission is strictly FIFO (a same-bucket run
+at the head of the queue is admitted together); a request longer than the
+cache buffer is rejected at submit time.  A request whose FIRST token already
+terminates it (EOS at prefill, or ``max_new_tokens == 1``) is finished at
+admission and never burns decode steps.
 """
 from __future__ import annotations
 
@@ -23,6 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import sampling
+
 
 @dataclasses.dataclass
 class Request:
@@ -30,34 +56,100 @@ class Request:
     prompt: np.ndarray              # (P,) int32
     max_new_tokens: int = 32
     eos_id: int = 2
+    temperature: float = 0.0        # 0 -> greedy
+    top_k: int = 0                  # 0 -> disabled
+    top_p: float = 1.0
+    seed: int = 0
     generated: Optional[List[int]] = None   # filled by the engine
+
+
+def _is_key(entry, name: str) -> bool:
+    return getattr(entry, "key", None) == name
 
 
 class ServingEngine:
     def __init__(self, model, params, *, slots: int = 4, buf_len: int = 256,
-                 extras=None):
+                 extras=None, drain_every: int = 4,
+                 pad_prefill: Optional[bool] = None):
         self.model = model
         self.params = params
         self.slots = slots
         self.buf_len = buf_len
-        # kept for admission: fresh per-slot caches must be rebuilt with the
-        # same extras (e.g. encoder output / image features feeding
-        # cross-attention caches), not from tokens alone
+        self.drain_every = drain_every
+        # extras (encoder output / image features feeding cross-attention
+        # caches) are engine-level: the fresh-cache template is built from
+        # them ONCE — admission reuses it instead of re-running the encoder
         self.extras = extras
-        # stacked per-slot caches: leading axis = slot, each slot batch=1
+        # recurrent-state families integrate padding tokens into the state;
+        # exact-length buckets keep batched prefill (same-length runs) without
+        # corrupting it
+        if pad_prefill is None:
+            pad_prefill = model.cfg.family not in ("ssm", "hybrid")
+        self.pad_prefill = pad_prefill
+
+        # per-slot cache trees stacked on a leading slot axis (slot batch=1);
+        # the SAME layout is used for live and fresh caches so admission can
+        # splice whole prefilled slots with one masked where over the tree
         one = model.init_cache(params, 1, buf_len, extras=extras)
-        self.cache = jax.tree_util.tree_map(
-            lambda a: jnp.stack([a] * slots), one)
+        stack = lambda a: jnp.stack([a] * slots)
+        self.cache = jax.tree_util.tree_map(stack, one)
+        self._fresh = self.cache
+        self.sstate = sampling.init_state(slots, buf_len)
+
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: deque = deque()
         self.done: Dict[int, Request] = {}
-        self.last_tok = jnp.zeros((slots, 1, 1), jnp.int32)
 
-        def _one_step(cache_slot, tok):
-            return model.decode_step(params, cache_slot, tok)
+        def _decode_hidden(cache_slot, tok):
+            return model.decode_step_hidden(params, cache_slot, tok)
 
-        self._decode = jax.jit(jax.vmap(_one_step))
-        self._prefill = jax.jit(model.decode_step)
+        def _steps(cache, st):
+            def one(carry, _):
+                cache, st = carry
+                tok_in = st["last_tok"].reshape(slots, 1, 1)
+                h, cache = jax.vmap(_decode_hidden)(cache, tok_in)
+                logits = model.lm_logits(params, h[:, 0, -1])   # (slots, V)
+                tok = sampling.sample(logits, st)
+                return (cache, sampling.advance(st, tok)), None
+            (cache, st), _ = jax.lax.scan(one, (cache, st), None,
+                                          length=self.drain_every)
+            return cache, st
+
+        def _prefill_admit(cache, fresh, st, tokens, lengths, admit,
+                           seeds, temps, top_ks, top_ps, eos_ids, max_news):
+            """Batched bucketed prefill + admission splice, one compile per
+            bucket length.  tokens: (slots, 1, Lb) right-padded; only rows
+            selected by ``admit`` are spliced in."""
+            h, pre = jax.vmap(_decode_hidden)(fresh, tokens)
+            idx = jnp.clip(lengths - 1, 0, h.shape[2] - 1)
+            hg = h[jnp.arange(slots), 0, idx]                   # (slots, d)
+            logits = model.lm_logits(params, hg)
+            keys = jax.vmap(jax.random.PRNGKey)(seeds.astype(jnp.uint32))
+            keys0 = jax.vmap(jax.random.fold_in)(keys, jnp.zeros_like(lengths))
+            tok0 = jax.vmap(sampling.sample_token)(
+                logits.astype(jnp.float32), keys0, temps, top_ks, top_ps)
+
+            def splice(path, eng, new):
+                m = admit.reshape((slots,) + (1,) * (eng.ndim - 1))
+                out = jnp.where(m, new, eng)
+                if _is_key(path[-1], "pos"):
+                    # invalidate padded cache entries: positions >= the real
+                    # prompt length were written by padding tokens
+                    lb = lengths.reshape((slots,) + (1,) * (eng.ndim - 1))
+                    out = jnp.where(m & (out >= lb), -1, out)
+                elif _is_key(path[-1], "t"):
+                    out = jnp.where(admit, lengths, out)
+                return out
+
+            cache = jax.tree_util.tree_map_with_path(splice, cache, pre)
+            st = sampling.admit_row(st, admit, seed=seeds, temperature=temps,
+                                    top_k=top_ks, top_p=top_ps,
+                                    eos_id=eos_ids, max_new=max_news,
+                                    first_tok=tok0)
+            return cache, st
+
+        self._step_fn = jax.jit(_steps)
+        self._admit_fn = jax.jit(_prefill_admit)
 
     # ------------------------------------------------------------ submit
 
@@ -71,47 +163,87 @@ class ServingEngine:
 
     # ------------------------------------------------------------ admission
 
-    def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            fresh = self.model.init_cache(self.params, 1, self.buf_len,
-                                          extras=self.extras)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, fresh = self._prefill(self.params, fresh, prompt)
-            tok = jnp.argmax(logits[:, -1:], axis=-1)
+    def _bucket(self, n: int) -> int:
+        if not self.pad_prefill:
+            return n
+        b = 1
+        while b < n:
+            b *= 2
+        b = min(b, self.buf_len)
+        w = self.model.cfg.sliding_window
+        if w and b > n and b > min(self.buf_len, w):
+            # a prefill longer than the rolling buffer keeps only the last C
+            # positions of the PADDED stream, so every pad token displaces
+            # one real window entry — prefill such prompts at exact length
+            # (padding is only transparent while the whole bucket fits the
+            # buffer, where invalidated pad slots sit beyond the real tail)
+            return n
+        return b
 
-            # splice the prefilled single-sequence cache into slot s
-            self.cache = jax.tree_util.tree_map(
-                lambda stacked, single: jax.lax.dynamic_update_slice(
-                    stacked, single[None].astype(stacked.dtype),
-                    (s,) + (0,) * single.ndim),
-                self.cache, fresh)
-            self.active[s] = req
-            self.last_tok = self.last_tok.at[s, 0, 0].set(tok[0, 0])
-            req.generated.append(int(tok[0, 0]))
+    def _admit(self):
+        while self.queue:
+            free = [s for s in range(self.slots) if self.active[s] is None]
+            if not free:
+                return
+            # FIFO: admit the longest same-bucket run at the head of the queue
+            lb = self._bucket(self.queue[0].prompt.size)
+            batch = []
+            while (self.queue and len(batch) < len(free)
+                   and self._bucket(self.queue[0].prompt.size) == lb):
+                batch.append(self.queue.popleft())
+
+            tokens = np.zeros((self.slots, 1, lb), np.int32)
+            lengths = np.ones((self.slots,), np.int32)
+            admit = np.zeros((self.slots,), bool)
+            seeds = np.zeros((self.slots,), np.int32)
+            temps = np.zeros((self.slots,), np.float32)
+            top_ks = np.zeros((self.slots,), np.int32)
+            top_ps = np.ones((self.slots,), np.float32)
+            eos_ids = np.full((self.slots,), -1, np.int32)
+            max_news = np.ones((self.slots,), np.int32)
+            for req, s in zip(batch, free):
+                p = np.asarray(req.prompt, np.int32)
+                tokens[s, 0, :p.size] = p
+                lengths[s] = p.size
+                admit[s] = True
+                seeds[s] = req.seed
+                temps[s] = req.temperature
+                top_ks[s] = req.top_k
+                top_ps[s] = req.top_p
+                eos_ids[s] = req.eos_id
+                max_news[s] = req.max_new_tokens
+                self.active[s] = req
+            self.cache, self.sstate = self._admit_fn(
+                self.cache, self._fresh, self.sstate, jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(admit), jnp.asarray(seeds),
+                jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(top_ps),
+                jnp.asarray(eos_ids), jnp.asarray(max_news))
 
     # ------------------------------------------------------------ stepping
 
-    def step(self) -> int:
-        """Admit + one decode step for all slots.  Returns #active."""
-        self._admit()
-        if not any(r is not None for r in self.active):
-            return 0
-        logits, self.cache = self._decode(self.cache, self.last_tok)
-        nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))
-        new_last = np.asarray(self.last_tok).copy()
+    def _drain(self):
+        """One host sync: pull token buffers + termination flags, append new
+        tokens to their requests, finalise finished slots."""
+        out, gen, alive = jax.device_get(
+            (self.sstate["out"], self.sstate["gen"], self.sstate["active"]))
         for s, req in enumerate(self.active):
             if req is None:
                 continue
-            tok = int(nxt[s])
-            req.generated.append(tok)
-            new_last[s, 0, 0] = tok
-            if tok == req.eos_id or len(req.generated) >= req.max_new_tokens:
+            n = int(gen[s])
+            have = len(req.generated)
+            req.generated.extend(int(t) for t in out[s, have:n])
+            if not bool(alive[s]):
                 self.done[req.uid] = req
                 self.active[s] = None
-        self.last_tok = jnp.asarray(new_last)
+
+    def step(self) -> int:
+        """Admit + ``drain_every`` fused decode steps + one drain.
+        Returns #active slots (host view, post-drain)."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        self.cache, self.sstate = self._step_fn(self.cache, self.sstate)
+        self._drain()
         return sum(1 for r in self.active if r is not None)
 
     def run(self, max_steps: int = 10_000):
@@ -119,3 +251,12 @@ class ServingEngine:
             if self.step() == 0 and not self.queue:
                 break
         return self.done
+
+    # ------------------------------------------------------------ telemetry
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-signature counts of the engine's jitted entry points —
+        the serving benchmark gates on these being frozen after warmup (the
+        admit function holds one entry per prefill bucket)."""
+        return {"step": self._step_fn._cache_size(),
+                "admit": self._admit_fn._cache_size()}

@@ -1,0 +1,123 @@
+"""Per-request, per-slot seeded sampling executed on device.
+
+The serving engine keeps one sampling row per decode slot: temperature /
+top-k / top-p knobs, a per-request PRNG key, the EOS id and token budget,
+a generated-token counter and an output ring.  Every piece lives in a flat
+dict of (slots,)-shaped device arrays so the whole thing rides inside the
+jitted decode step — ``sample`` picks the next token for every slot and
+``advance`` applies EOS / max-new-tokens termination and appends to the
+output buffer, all without a host round-trip.
+
+Sampling semantics (per slot):
+
+  * greedy is the zero-temperature case (``temperature <= 0`` -> argmax);
+  * otherwise logits are scaled by 1/temperature, restricted to the top-k
+    highest (``top_k == 0`` disables) and to the smallest prefix whose
+    probability mass reaches ``top_p`` (the boundary token is kept), then
+    sampled by Gumbel-max over the surviving set;
+  * the step key is ``fold_in(request_key, token_index)`` — a request's
+    sample stream depends only on its seed and how many tokens it has
+    generated, never on slot placement, admission order or drain cadence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ state
+
+def init_state(slots: int, out_len: int) -> dict:
+    """Fresh per-slot sampling/termination state (everything device-side)."""
+    return {
+        "key": jax.vmap(jax.random.PRNGKey)(jnp.zeros((slots,), jnp.uint32)),
+        "temperature": jnp.zeros((slots,), jnp.float32),
+        "top_k": jnp.zeros((slots,), jnp.int32),
+        "top_p": jnp.ones((slots,), jnp.float32),
+        "eos_id": jnp.full((slots,), -1, jnp.int32),
+        "max_new": jnp.zeros((slots,), jnp.int32),
+        "gen": jnp.zeros((slots,), jnp.int32),      # tokens generated so far
+        "active": jnp.zeros((slots,), bool),
+        "last_tok": jnp.zeros((slots,), jnp.int32),
+        "out": jnp.zeros((slots, out_len), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------- sampling
+
+def sample_token(logits, key, temperature, top_k, top_p):
+    """One token from one (V,) logit row.  Fully traceable; all knobs may be
+    traced scalars (per-slot values under vmap)."""
+    V = logits.shape[-1]
+    sorted_l, sorted_i = jax.lax.top_k(logits.astype(jnp.float32), V)
+    greedy = sorted_i[0]
+
+    scaled = sorted_l / jnp.maximum(temperature, 1e-6)
+    probs = jax.nn.softmax(scaled)
+    cum = jnp.cumsum(probs)
+    k_eff = jnp.where(top_k > 0, top_k, V)
+    keep = jnp.arange(V) < k_eff
+    # keep the token that crosses the top_p boundary (prefix mass < p)
+    keep &= (cum - probs) < top_p
+    keep = keep.at[0].set(True)                 # never mask everything
+    masked = jnp.where(keep, scaled, -jnp.inf)
+    choice = jnp.argmax(masked + jax.random.gumbel(key, (V,)))
+    sampled = sorted_i[choice]
+    return jnp.where(temperature > 0.0, sampled, greedy).astype(jnp.int32)
+
+
+def sample(logits, state):
+    """Next token for every slot.  logits: (slots, V) — the step key folds the
+    per-slot generated-token count into the per-request key."""
+    keys = jax.vmap(jax.random.fold_in)(state["key"], state["gen"])
+    return jax.vmap(sample_token)(logits, keys, state["temperature"],
+                                  state["top_k"], state["top_p"])
+
+
+# ------------------------------------------------------- termination step
+
+def advance(state, tok):
+    """Record ``tok`` for every active slot and apply termination on device:
+    EOS or the token budget flips ``active`` off; inactive slots are frozen
+    (their counter, output buffer and feedback token do not move)."""
+    active = state["active"]
+    gen = state["gen"]
+    done = active & ((tok == state["eos_id"]) | (gen + 1 >= state["max_new"]))
+    slots = jnp.arange(tok.shape[0])
+    pos = jnp.clip(gen, 0, state["out"].shape[1] - 1)
+    out = state["out"].at[slots, pos].set(
+        jnp.where(active, tok, state["out"][slots, pos]))
+    new = dict(state)
+    new["out"] = out
+    new["gen"] = gen + active.astype(gen.dtype)
+    new["active"] = active & ~done
+    new["last_tok"] = jnp.where(active, tok, state["last_tok"])
+    return new
+
+
+def admit_row(state, admit, *, seed, temperature, top_k, top_p, eos_id,
+              max_new, first_tok):
+    """Overwrite the sampling rows selected by the ``admit`` mask with fresh
+    request parameters and the prefill-produced first token, applying the
+    admission-time termination check (first token is EOS, or the budget is a
+    single token) so such requests never burn decode steps."""
+    def pick(new, old):
+        m = admit.reshape((admit.shape[0],) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    done0 = (first_tok == eos_id) | (max_new <= 1)
+    slots = jnp.arange(admit.shape[0])
+    new = dict(state)
+    new["key"] = pick(jax.vmap(jax.random.PRNGKey)(seed.astype(jnp.uint32)),
+                      state["key"])
+    new["temperature"] = pick(temperature, state["temperature"])
+    new["top_k"] = pick(top_k, state["top_k"])
+    new["top_p"] = pick(top_p, state["top_p"])
+    new["eos_id"] = pick(eos_id, state["eos_id"])
+    new["max_new"] = pick(max_new, state["max_new"])
+    new["gen"] = pick(jnp.ones_like(state["gen"]), state["gen"])
+    new["active"] = pick(~done0, state["active"])
+    new["last_tok"] = pick(first_tok, state["last_tok"])
+    new["out"] = state["out"].at[slots, 0].set(
+        jnp.where(admit, first_tok, state["out"][:, 0]))
+    return new

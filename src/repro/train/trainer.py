@@ -29,6 +29,14 @@ def make_train_step(model, optimizer, *, n_micro: int = 1,
 
     def train_step(params, opt_state, batch):
         if n_micro > 1:
+            gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            if gb % n_micro != 0:
+                # validate before the reshape: otherwise XLA throws a raw
+                # shape error naming neither quantity
+                raise ValueError(
+                    f"global batch {gb} is not divisible by n_micro={n_micro} "
+                    f"(remainder {gb % n_micro}); pick n_micro dividing the "
+                    f"global batch or pad the batch")
             resh = jax.tree_util.tree_map(
                 lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
                 batch)

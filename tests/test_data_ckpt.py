@@ -57,6 +57,21 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
     assert restored["b"]["c"].dtype == jnp.bfloat16
 
 
+def test_gc_sweeps_orphaned_tmp_dirs(tmp_path):
+    """Regression: a crash between os.makedirs(tmp) and os.replace left
+    step_*.tmp directories that _gc never removed — they accumulated forever.
+    A later save must sweep them."""
+    tree = {"a": jnp.arange(4.0)}
+    orphan = tmp_path / "step_00000005.tmp"
+    orphan.mkdir()
+    (orphan / "proc0.npz").write_bytes(b"partial garbage")
+    ckpt.save(str(tmp_path), 10, tree, keep=2)
+    found = sorted(os.listdir(tmp_path))
+    assert "step_00000005.tmp" not in found
+    assert "step_00000010" in found
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
 def test_checkpoint_partial_write_invisible(tmp_path):
     tree = {"a": jnp.zeros(4)}
     ckpt.save(str(tmp_path), 1, tree)

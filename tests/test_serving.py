@@ -1,5 +1,7 @@
 """Continuous-batching serving engine: correctness under staggered admission,
-slot reuse, rejection, and async checkpointing."""
+slot reuse, rejection, admission-time termination, on-device sampling
+(seeded temperature / top-k / top-p), drain cadence, recompile stability,
+and async checkpointing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,7 @@ import pytest
 from repro.checkpoint.manager import AsyncCheckpointer, latest_step, restore
 from repro.configs.base import get_config
 from repro.models.model import Model
+from repro.serving import sampling
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -100,6 +103,229 @@ def test_admission_rebuilds_cache_with_extras():
             tok = jnp.argmax(lg[:, -1:], -1)
             want.append(int(tok[0, 0]))
         assert done[uid].generated == want, uid
+
+
+# --------------------------------------------------- admission termination
+
+def test_eos_as_first_token_terminates_at_admission(small_model):
+    """Regression: the prefill-produced token was appended but never checked,
+    so a request whose FIRST token is EOS decoded to max_new_tokens anyway."""
+    cfg, model, params = small_model
+    prompt = np.array([5, 6, 7, 8], np.int32)
+    ref = _greedy_ref(model, params, prompt, 4, 64)
+    eng = ServingEngine(model, params, slots=2, buf_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8,
+                       eos_id=ref[0]))
+    done = eng.run()
+    assert done[0].generated == [ref[0]]
+    # the slot must be reusable afterwards
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=3, eos_id=-1))
+    done = eng.run()
+    assert done[1].generated == ref[:3]
+
+
+def test_max_new_tokens_one_emits_one_token(small_model):
+    """Regression: max_new_tokens=1 used to emit 2 tokens (off-by-one: the
+    budget was only checked after the first decode step appended a second)."""
+    cfg, model, params = small_model
+    prompt = np.array([9, 10, 11], np.int32)
+    ref = _greedy_ref(model, params, prompt, 1, 64)
+    eng = ServingEngine(model, params, slots=1, buf_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=1, eos_id=-1))
+    done = eng.run()
+    assert done[0].generated == ref
+
+
+def test_mid_sequence_eos_terminates(small_model):
+    cfg, model, params = small_model
+    prompt = np.array([12, 13, 14, 15, 16], np.int32)
+    ref = _greedy_ref(model, params, prompt, 6, 64)
+    eng = ServingEngine(model, params, slots=1, buf_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6,
+                       eos_id=ref[2]))
+    done = eng.run()
+    assert done[0].generated == ref[:3]
+
+
+# --------------------------------------------------------- on-device sampling
+
+def test_sampling_seeded_and_slot_independent(small_model):
+    """Same (seed, prompt) must generate the same tokens regardless of which
+    slot the request lands in or what else is running — the sample stream
+    keys off (request seed, token index) only."""
+    cfg, model, params = small_model
+    prompt = np.array([21, 22, 23, 24], np.int32)
+    req = dict(prompt=prompt, max_new_tokens=6, eos_id=-1,
+               temperature=0.9, top_k=0, top_p=1.0, seed=7)
+
+    eng = ServingEngine(model, params, slots=2, buf_len=64)
+    eng.submit(Request(uid=0, **req))
+    alone = eng.run()[0].generated
+
+    eng2 = ServingEngine(model, params, slots=2, buf_len=64)
+    rng = np.random.default_rng(3)
+    for uid in (1, 2, 3):   # other traffic first: different slot/admission
+        eng2.submit(Request(uid=uid,
+                            prompt=rng.integers(4, cfg.vocab_size, size=5)
+                            .astype(np.int32),
+                            max_new_tokens=4, eos_id=-1, temperature=0.5,
+                            seed=uid))
+    eng2.submit(Request(uid=0, **req))
+    crowded = eng2.run()[0].generated
+    assert alone == crowded
+    assert len(alone) == 6
+
+
+def test_temperature_zero_matches_greedy(small_model):
+    cfg, model, params = small_model
+    prompt = np.array([31, 32, 33], np.int32)
+    ref = _greedy_ref(model, params, prompt, 5, 64)
+    eng = ServingEngine(model, params, slots=1, buf_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=5, eos_id=-1,
+                       temperature=0.0, top_k=40, top_p=0.9, seed=123))
+    assert eng.run()[0].generated == ref
+
+
+def test_top_k_one_matches_greedy(small_model):
+    cfg, model, params = small_model
+    prompt = np.array([41, 42, 43, 44], np.int32)
+    ref = _greedy_ref(model, params, prompt, 5, 64)
+    eng = ServingEngine(model, params, slots=1, buf_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=5, eos_id=-1,
+                       temperature=1.5, top_k=1, seed=99))
+    assert eng.run()[0].generated == ref
+
+
+def test_drain_cadence_does_not_change_tokens(small_model):
+    """Termination runs on device, so the host drain interval is purely a
+    sync-frequency knob — outputs must be identical for any drain_every."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(4, cfg.vocab_size, size=int(rng.integers(4, 12)))
+               .astype(np.int32) for _ in range(4)]
+
+    outs = {}
+    for de in (1, 4):
+        eng = ServingEngine(model, params, slots=2, buf_len=64,
+                            drain_every=de)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=5,
+                               eos_id=-1, temperature=0.8, seed=uid))
+        done = eng.run()
+        outs[de] = {u: r.generated for u, r in done.items()}
+    assert outs[1] == outs[4]
+
+
+def test_no_recompile_within_warm_buckets(small_model):
+    """Admission pads prompts to power-of-two buckets: once a bucket is warm,
+    new prompt lengths inside it must not trigger any compilation."""
+    cfg, model, params = small_model
+    eng = ServingEngine(model, params, slots=2, buf_len=64)
+    eng.submit(Request(uid=0, prompt=np.arange(4, 12, dtype=np.int32),
+                       max_new_tokens=2, eos_id=-1))    # warms bucket 8
+    eng.run()
+    warm = eng.jit_cache_sizes()
+    for uid, n in enumerate((5, 6, 7, 8), start=1):     # all bucket 8
+        eng.submit(Request(uid=uid,
+                           prompt=np.arange(4, 4 + n, dtype=np.int32),
+                           max_new_tokens=3, eos_id=-1, temperature=0.3,
+                           seed=uid))
+    eng.run()
+    assert eng.jit_cache_sizes() == warm
+
+
+def test_bucket_never_pads_past_rolling_window(small_model):
+    """A prefill longer than the rolling kv buffer keeps only the last C
+    positions of the PADDED stream — every pad token displaces one real
+    window entry.  Prompts whose bucket exceeds the window must therefore
+    prefill at exact length (padding is only transparent while the whole
+    bucket fits the buffer)."""
+    cfg, model, params = small_model
+    eng = ServingEngine(model, params, slots=1, buf_len=256)
+    C = min(256, cfg.sliding_window)
+    assert eng._bucket(5) == 8                      # bucket fits buffer: pad
+    assert eng._bucket(C) == C                      # exact pow2, no padding
+    for n in (C + 5, 2 * C + 1):                    # bucket > C: exact length
+        assert eng._bucket(n) == n
+    # decode through the exact-length long-prompt path stays exact vs the
+    # per-sequence reference
+    prompt = np.arange(4, 4 + C + 5, dtype=np.int32) % 100 + 4
+    ref = _greedy_ref(model, params, prompt, 3, 256)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=3, eos_id=-1))
+    assert eng.run()[0].generated == ref
+
+
+def test_ssm_family_uses_exact_length_buckets():
+    """Recurrent-state caches integrate padding tokens, so ssm/hybrid archs
+    must bucket by exact prompt length (and still match per-sequence decode)."""
+    cfg = get_config("rwkv6-3b", reduced=True).replace(num_layers=2)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, slots=2, buf_len=32)
+    assert not eng.pad_prefill
+    assert eng._bucket(5) == 5
+    prompts = [np.array([4, 5, 6, 7, 8], np.int32),
+               np.array([9, 10, 11], np.int32)]
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4, eos_id=-1))
+    done = eng.run()
+    for uid, p in enumerate(prompts):
+        assert done[uid].generated == _greedy_ref(model, params, p, 4, 32), uid
+
+
+# ----------------------------------------------------- sampling primitives
+
+def test_sample_token_greedy_and_masks():
+    logits = jnp.asarray([0.1, 3.0, 1.0, 2.0, -1.0])
+    key = jax.random.PRNGKey(0)
+    # temperature 0 -> argmax regardless of knobs
+    for k, p in ((0, 1.0), (2, 0.5), (1, 0.1)):
+        tok = sampling.sample_token(logits, key, jnp.float32(0.0),
+                                    jnp.int32(k), jnp.float32(p))
+        assert int(tok) == 1
+    # top_k=1 -> argmax at any temperature
+    tok = sampling.sample_token(logits, key, jnp.float32(2.0),
+                                jnp.int32(1), jnp.float32(1.0))
+    assert int(tok) == 1
+    # top_k=2 restricts samples to the two best tokens {1, 3}
+    toks = {int(sampling.sample_token(logits, jax.random.PRNGKey(i),
+                                      jnp.float32(5.0), jnp.int32(2),
+                                      jnp.float32(1.0)))
+            for i in range(50)}
+    assert toks <= {1, 3} and len(toks) == 2
+    # tiny top_p with a peaked distribution -> only the top token survives
+    peaked = jnp.asarray([0.0, 10.0, 0.0, 0.0, 0.0])
+    toks = {int(sampling.sample_token(peaked, jax.random.PRNGKey(i),
+                                      jnp.float32(1.0), jnp.int32(0),
+                                      jnp.float32(0.5)))
+            for i in range(20)}
+    assert toks == {1}
+
+
+def test_sample_token_deterministic_per_key():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    a = sampling.sample_token(logits, jax.random.PRNGKey(5), jnp.float32(1.0),
+                              jnp.int32(0), jnp.float32(1.0))
+    b = sampling.sample_token(logits, jax.random.PRNGKey(5), jnp.float32(1.0),
+                              jnp.int32(0), jnp.float32(1.0))
+    assert int(a) == int(b)
+
+
+def test_advance_freezes_inactive_slots():
+    st = sampling.init_state(3, 8)
+    st["active"] = jnp.asarray([True, True, False])
+    st["max_new"] = jnp.asarray([4, 1, 4], jnp.int32)
+    st["eos_id"] = jnp.asarray([7, -1, -1], jnp.int32)
+    st["gen"] = jnp.asarray([0, 0, 2], jnp.int32)
+    tok = jnp.asarray([7, 5, 9], jnp.int32)
+    new = sampling.advance(st, tok)
+    # slot 0: EOS -> recorded then terminated; slot 1: budget of 1 -> done;
+    # slot 2: inactive -> untouched
+    assert new["active"].tolist() == [False, False, False]
+    assert new["gen"].tolist() == [1, 1, 2]
+    assert new["out"][0, 0] == 7 and new["out"][1, 0] == 5
+    assert int(new["out"][2, 2]) == 0                   # not written
+    assert new["last_tok"].tolist()[2] == 0             # frozen
 
 
 def test_async_checkpointer(tmp_path):

@@ -91,6 +91,39 @@ def test_jit_step_on_debug_mesh():
     assert bool(jnp.isfinite(loss))
 
 
+MESH_TP = _FakeMesh({"model": 8})
+
+
+def test_model_only_mesh_replicates_batch():
+    """Regression: batch_pspec/cache_pspecs crashed with IndexError (fa[0])
+    on a mesh with no pod/data axes (model-only TP serving mesh)."""
+    assert shd.batch_pspec(MESH_TP, 4, 2) == P()
+    assert shd.batch_pspec(MESH_TP, 1, 2, dim1=1) == P()
+
+
+def test_model_only_mesh_cache_pspecs():
+    import types
+    shapes = {
+        "kv": {"k": types.SimpleNamespace(shape=(4, 2, 256, 8, 32)),
+               "pos": types.SimpleNamespace(shape=(256,))},
+        "t": types.SimpleNamespace(shape=()),
+    }
+    specs = shd.cache_pspecs(shapes, MESH_TP, batch_size=2, kv_heads=8)
+    # no data axes: batch stays unsharded, but the kv-heads dim still takes
+    # the model axis (8 % 8 == 0)
+    assert specs["kv"]["k"] == P(None, None, None, "model")
+    assert specs["t"] == P()
+    # GQA kv heads that don't divide the model axis: sequence-dim fallback
+    specs = shd.cache_pspecs(shapes, MESH_TP, batch_size=2, kv_heads=2)
+    assert specs["kv"]["k"] == P(None, None, "model")
+
+
+def test_spec_for_on_model_only_mesh():
+    # fsdp candidates expand to no axes -> embed replicates, heads shard
+    spec = shd.spec_for((4096, 1024), ("embed", "heads"), MESH_TP)
+    assert spec == P(None, "model")
+
+
 def test_batch_pspec_fallbacks():
     assert shd.batch_pspec(MESH2, 256, 2) == P(("pod", "data"), None)
     # batch=1 long-context: a long divisible sequence dim takes the data axes

@@ -52,6 +52,24 @@ def test_revffn_and_sft_losses_comparable():
     assert results["rev"] < 7.0
 
 
+def test_trainer_rejects_indivisible_microbatch():
+    """Regression: global_batch % n_micro != 0 used to surface as a raw XLA
+    reshape error; it must fail up front naming both values."""
+    cfg = get_config("h2o-danube-1.8b", reduced=True).replace(num_layers=2)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    st = opt.init(params)
+    step = make_train_step(model, opt, n_micro=3)
+    batch = {"tokens": jnp.zeros((4, 32), jnp.int32)}
+    with pytest.raises(ValueError, match=r"global batch 4.*n_micro=3"):
+        step(params, st, batch)
+    # the divisible case still runs
+    step2 = make_train_step(model, opt, n_micro=2)
+    _, _, metrics = step2(params, st, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
 def test_reversible_residuals_are_depth_independent():
     """Inspect the jaxpr: residuals saved for backward must not scale with
     depth (this is the paper's memory claim, checked structurally)."""
