@@ -48,6 +48,12 @@ class ModelConfig:
     moe_backend: str = "einsum"    # "einsum" (dense one-hot dispatch, capacity
                                    # drops) | "grouped" (sort-based dropless
                                    # grouped GEMM, repro.kernels.moe)
+    expert_parallel: int = 0       # EP degree over the mesh "expert" axis
+                                   # (kernels/moe/ep.py): 0 disables; >= 1
+                                   # routes expert execution through the
+                                   # shard_map all-to-all dispatch path
+                                   # (dropless, grouped-GEMM per shard).
+                                   # Requires settings.set_ep_mesh(mesh).
 
     # SSM / hybrid
     ssm_state: int = 0             # mamba2 state size

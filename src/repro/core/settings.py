@@ -13,6 +13,12 @@ SCAN_UNROLL: int = 1
 # pairs instead of all-reduces around TP matmuls (half the traffic).
 ACT_SPEC = None
 
+# Expert-parallel mesh handle (DESIGN.md §10): shard_map needs the concrete
+# Mesh at trace time, and the MoE layer sits too deep to thread it through
+# call signatures — launchers/tests that enable ModelConfig.expert_parallel
+# set the mesh (carrying an "expert" axis) here before tracing.
+EP_MESH = None
+
 
 def set_unroll(n: int):
     global SCAN_UNROLL
@@ -22,3 +28,8 @@ def set_unroll(n: int):
 def set_act_spec(spec):
     global ACT_SPEC
     ACT_SPEC = spec
+
+
+def set_ep_mesh(mesh):
+    global EP_MESH
+    EP_MESH = mesh

@@ -1,0 +1,33 @@
+"""Collective-traffic accounting from partitioned HLO text.
+
+Lives apart from ``repro.launch.dryrun`` (which sets the 512-fake-device
+XLA flag at import) so compute processes — benchmarks gating on measured
+collective bytes — can parse compiled modules without that side effect.
+"""
+from __future__ import annotations
+
+import re
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([0-9,]*)\]")
+BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+         "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic by op kind, from the partitioned HLO."""
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        result, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in SHAPE_RE.finditer(result):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out

@@ -5,14 +5,18 @@ maps them onto the physical mesh:
 
   embed (d_model dims)          -> FSDP axes ("pod","data") — ZeRO-3 style
   heads / kv_heads / mlp / ...  -> "model" (tensor parallel)
-  experts                       -> "model" (expert parallel)
+  experts                       -> "expert" (explicit EP axis, DESIGN.md §10)
+                                   when the mesh has one, else "model"
   vocab                         -> "model"
   layers / None                 -> replicated
 
-A mesh axis is dropped for a given tensor dimension when (a) it does not
-divide the dimension (e.g. whisper's vocab 51865, GQA kv_heads < 16) or
-(b) it is already used by another dimension of the same tensor (e.g. expert
-ffn dim when the expert dim already took "model").
+A mesh axis is dropped for a given tensor dimension when (a) the mesh does
+not have it (no "expert" axis without EP, no "model" axis on a pure-FSDP
+mesh), (b) it is trivial (size 1 — sharding over it is replication, and
+assigning it would shadow a later candidate that actually splits), (c) it
+does not divide the dimension (e.g. whisper's vocab 51865, GQA
+kv_heads < 16), or (d) it is already used by another dimension of the same
+tensor (e.g. expert ffn dim when the expert dim already took "model").
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ RULES = {
     "heads": ("model",),
     "kv_heads": ("model",),
     "mlp": ("model",),
-    "experts": ("model",),
+    "experts": ("expert", "model"),
     "expert_mlp": ("model", "fsdp"),
     "vocab": ("model",),
     "stream": ("model",),
@@ -79,23 +83,34 @@ def jit_shardings(tree, mesh: Mesh):
 
 
 def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """ZeRO-3 parameter-sharding axes.  The "expert" axis (carved out of
+    the data dimension, DESIGN.md §10) participates: its device groups are
+    data replicas for everything outside the MoE dispatch, so excluding it
+    would multiply every non-expert param shard (and batch compute) by EP.
+    ``spec_for`` drops already-used axes from the expansion, so MoE expert
+    weights — whose expert dim takes "expert" itself — still shard their
+    embed dims over the remaining (pod, data)."""
     if SERVE_TP_ONLY:
         return ()
-    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    axes = tuple(a for a in mesh.axis_names
+                 if a in ("pod", "data", "expert"))
     if HSDP:
         axes = tuple(a for a in axes if a != "pod")
     return axes
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
-    """Batch sharding axes — always includes the pod axis (even under HSDP)."""
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    """Batch sharding axes — always includes the pod axis (even under HSDP)
+    and the "expert" axis when present (tokens re-shard onto it inside the
+    MoE layer's shard_map; everywhere else it behaves as data parallelism)."""
+    return tuple(a for a in mesh.axis_names
+                 if a in ("pod", "data", "expert"))
 
 
 def _expand(cand: str, mesh: Mesh):
     if cand == "fsdp":
         return fsdp_axes(mesh)
-    return (cand,)
+    return (cand,) if cand in mesh.axis_names else ()
 
 
 def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
@@ -109,10 +124,16 @@ def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
     for dim, name in zip(shape, logical):
         assigned = None
         for cand in RULES.get(name, ()):
-            axes = _expand(cand, mesh)
+            # drop axes another dim of this tensor already took (partial
+            # fsdp expansions stay useful: expert weights shard embed dims
+            # over (pod, data) after the expert dim consumed "expert")
+            axes = tuple(a for a in _expand(cand, mesh) if a not in used)
             if not axes:
                 continue
-            if any(a in used for a in axes):
+            if _axis_size(mesh, axes) == 1:
+                # trivial axis (e.g. the size-1 "expert" axis of an EP=1
+                # mesh): sharding over it is replication — skip so a later
+                # candidate that actually splits can take the dim
                 continue
             if dim % _axis_size(mesh, axes) != 0:
                 continue

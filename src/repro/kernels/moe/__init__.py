@@ -7,6 +7,8 @@ Selected per config via ``ModelConfig.moe_backend = "grouped"``; the
 legacy dense one-hot dispatch einsum remains ``"einsum"``.
 """
 from repro.kernels.moe.dispatch import DispatchPlan, combine, make_plan, permute
+from repro.kernels.moe.ep import (EP_AXIS, ep_dispatch_stats, ep_expert_ffn,
+                                  validate_ep)
 from repro.kernels.moe.grouped_gemm import grouped_matmul_pallas
 from repro.kernels.moe.ops import (default_block_m, default_impl,
                                    grouped_expert_ffn, grouped_matmul)
@@ -16,4 +18,5 @@ __all__ = [
     "DispatchPlan", "combine", "make_plan", "permute",
     "grouped_matmul_pallas", "grouped_matmul_ref", "grouped_matmul",
     "grouped_expert_ffn", "default_block_m", "default_impl",
+    "EP_AXIS", "ep_expert_ffn", "ep_dispatch_stats", "validate_ep",
 ]

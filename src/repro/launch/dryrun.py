@@ -23,7 +23,6 @@ per-device HBM); memory_analysis/cost_analysis feed EXPERIMENTS.md §Roofline.
 """
 import argparse
 import json
-import re
 import sys
 import time
 from typing import Optional
@@ -39,29 +38,9 @@ from repro.models.model import Model
 from repro.optim.adamw import AdamW
 from repro.train.trainer import make_train_step
 
-COLLECTIVE_RE = re.compile(
-    r"=\s*((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|"
-    r"all-to-all|collective-permute)")
-SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([0-9,]*)\]")
-BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-         "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Per-device collective traffic by op kind, from the partitioned HLO."""
-    out = {}
-    for m in COLLECTIVE_RE.finditer(hlo_text):
-        result, kind = m.group(1), m.group(2)
-        nbytes = 0
-        for sm in SHAPE_RE.finditer(result):
-            dt, dims = sm.group(1), sm.group(2)
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            nbytes += n * BYTES[dt]
-        out[kind] = out.get(kind, 0) + nbytes
-    return out
+# collective accounting shared with benchmarks (which cannot import this
+# module: the XLA flag above is an import-time side effect)
+from repro.distributed.hlo_stats import collective_bytes  # noqa: E402
 
 
 def abstract_batch(cfg, shape: ShapeConfig, mesh):
@@ -112,6 +91,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
         cfg = cfg.replace(attn_q_chunk=256)
     model = Model(cfg)
     shd.HSDP = hsdp
+    if cfg.expert_parallel > 0:
+        settings.set_ep_mesh(mesh)
     fa = shd.data_axes(mesh)
     faxis = fa if len(fa) > 1 else fa[0]
     model.batch_spec = P(faxis)
@@ -232,7 +213,18 @@ def plan_main(argv):
                     choices=["einsum", "grouped"],
                     help="override ModelConfig.moe_backend for the plan "
                          "trace (grouped shrinks MoE dispatch residuals)")
+    ap.add_argument("--ep", type=int, default=0,
+                    help="plan MoE configs under expert parallelism: the "
+                         "trace runs the shard_map a2a dispatch path and "
+                         "the report surfaces the per-layer a2a comm bytes")
     args = ap.parse_args(argv)
+
+    if args.ep > 0:
+        from repro.core import settings
+        from repro.launch.mesh import make_debug_mesh
+        n_dev = len(jax.devices())
+        settings.set_ep_mesh(make_debug_mesh(data=n_dev // args.ep,
+                                             expert=args.ep))
 
     archs = ARCHS if args.all else [_resolve_arch(args.arch or "qwen2-moe-a2.7b")]
     unfit = []
@@ -240,6 +232,8 @@ def plan_main(argv):
         cfg = get_config(arch, reduced=args.reduced)
         if args.moe_backend is not None:
             cfg = cfg.replace(moe_backend=args.moe_backend)
+        if args.ep > 0 and cfg.num_experts > 0:
+            cfg = cfg.replace(expert_parallel=args.ep)
         try:
             p = plan(cfg, budget_gb=args.budget_gb, batch=args.batch,
                      seq=args.seq, optimizer=args.optimizer)
@@ -271,13 +265,21 @@ def main():
     ap.add_argument("--micro-tokens", type=int, default=8192)
     ap.add_argument("--moe-backend", default=None,
                     choices=["einsum", "grouped"])
+    ap.add_argument("--ep", type=int, default=0,
+                    help="expert-parallel degree: carve an 'expert' axis "
+                         "out of the production mesh's data axis and route "
+                         "MoE layers through the shard_map a2a dispatch "
+                         "(kernels/moe/ep, DESIGN.md §10)")
     args = ap.parse_args()
 
     meshes = []
     if args.both_meshes:
-        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+        meshes = [make_production_mesh(expert=max(args.ep, 1)),
+                  make_production_mesh(multi_pod=True,
+                                       expert=max(args.ep, 1))]
     else:
-        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+        meshes = [make_production_mesh(multi_pod=args.multi_pod,
+                                       expert=max(args.ep, 1))]
 
     cells = []
     if args.all:
@@ -292,8 +294,14 @@ def main():
         for arch, sh in cells:
             tag = f"{arch} x {sh} @ {tuple(mesh.shape.values())}"
             try:
-                overrides = ({"moe_backend": args.moe_backend}
-                             if args.moe_backend else None)
+                overrides = {}
+                if args.moe_backend:
+                    overrides["moe_backend"] = args.moe_backend
+                if args.ep > 0 and get_config(arch).num_experts > 0:
+                    # EP only applies to MoE archs — a dense cell under
+                    # --all --ep just runs without it
+                    overrides["expert_parallel"] = args.ep
+                overrides = overrides or None
                 res, _, compiled = lower_cell(
                     arch, sh, mesh, micro_tokens=args.micro_tokens,
                     model_overrides=overrides,

@@ -3,18 +3,40 @@
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state.  The dry-run launcher sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+
+Expert parallelism (DESIGN.md §10) adds an optional ``"expert"`` mesh axis,
+carved out of the data dimension: the same devices that were pure data
+replicas additionally own a slice of the expert axis, and the MoE layer's
+shard_map all-to-all runs over that axis while FSDP/batch sharding keeps
+using the remaining "data"/"pod" axes.
 """
 from __future__ import annotations
 
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, expert: int = 1):
+    data = 16
+    if expert > 1:
+        if data % expert != 0:
+            raise ValueError(
+                f"expert-parallel size {expert} must divide the data axis "
+                f"({data}) it is carved from")
+        shape = (data // expert, expert, 16)
+        axes = ("data", "expert", "model")
+        if multi_pod:
+            shape, axes = (2,) + shape, ("pod",) + axes
+        return jax.make_mesh(shape, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_debug_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many devices exist (tests)."""
+def make_debug_mesh(data: int = 1, model: int = 1, expert: int = 0):
+    """Small mesh over however many devices exist (tests).  ``expert > 0``
+    appends an "expert" axis of that size (an explicit size-1 axis is valid:
+    the EP dispatch path runs unchanged with a single expert shard)."""
+    if expert > 0:
+        return jax.make_mesh((data, expert, model),
+                             ("data", "expert", "model"))
     return jax.make_mesh((data, model), ("data", "model"))

@@ -40,11 +40,24 @@ def main():
                     choices=["einsum", "grouped"],
                     help="override ModelConfig.moe_backend (grouped = "
                          "sort-based dropless dispatch, repro.kernels.moe)")
+    ap.add_argument("--ep", type=int, default=0,
+                    help="expert-parallel degree (kernels/moe/ep): shards "
+                         "experts+tokens over a dedicated 'expert' mesh "
+                         "axis with an all-to-all dispatch; on CPU, fake "
+                         "host devices are forced so --reduced smoke runs "
+                         "exercise the real multi-device path")
     ap.add_argument("--use-flash-kernel", action="store_true",
                     help="flash attention on the train path (Pallas fwd+bwd "
                          "kernels on TPU, tiled pure-JAX fallback here; "
                          "O(S) attention residuals, DESIGN.md §8)")
     args = ap.parse_args()
+
+    if args.ep > 1:
+        # must happen before the jax import: smoke runs on this CPU-only
+        # container need enough (fake) devices to carry the expert axis
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.ep}")
 
     import jax
     from repro.configs.base import get_config
@@ -60,6 +73,16 @@ def main():
         cfg = cfg.replace(moe_backend=args.moe_backend)
     if args.use_flash_kernel:
         cfg = cfg.replace(use_flash_kernel=True)
+    if args.ep > 0:
+        from repro.core import settings
+        from repro.launch.mesh import make_debug_mesh
+        cfg = cfg.replace(expert_parallel=args.ep)
+        n_dev = len(jax.devices())
+        if n_dev % args.ep != 0:
+            raise SystemExit(f"--ep {args.ep} does not divide the "
+                             f"{n_dev} available devices")
+        settings.set_ep_mesh(make_debug_mesh(data=n_dev // args.ep,
+                                             expert=args.ep))
     model = Model(cfg)
     print(f"[train] {cfg.name}: {model.num_params() / 1e6:.1f}M params, "
           f"family={cfg.family}, reversible={cfg.reversible}")

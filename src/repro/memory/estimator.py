@@ -259,6 +259,47 @@ def moe_dispatch_cost(cfg: ModelConfig, batch: int, seq: int,
     }
 
 
+def ep_a2a_cost(cfg: ModelConfig, batch: int, seq: int,
+                ep: Optional[int] = None, block_m: int = 128) -> dict:
+    """Analytic per-MoE-layer all-to-all cost of expert-parallel dispatch
+    (kernels/moe/ep, DESIGN.md §10), per device.
+
+    ``payload`` counts the token rows a ragged exchange puts on the wire:
+    each device sends its Tl*k assignment rows out and receives the results
+    back, so payload bytes scale exactly ∝ 1/EP in the per-device token
+    share.  ``expected_wire`` scales that by the uniform-routing off-device
+    fraction (1 - 1/ep); ``buffer`` is what the dense-a2a emulation on this
+    JAX moves instead (static worst-case per-peer capacity — see the module
+    docstring of kernels/moe/ep for why).  ``local_gemm_rows`` is the padded
+    row count each device's grouped GEMMs run over.  Figures are per data
+    replica: when the token dim additionally shards over (pod, data), each
+    device carries 1/data_shards of every quantity here.
+    """
+    from repro.kernels.moe.dispatch import round_up
+    from repro.kernels.moe.ep import validate_ep
+    from repro.models import moe as moe_lib
+
+    ep = ep or cfg.expert_parallel or 1
+    T = batch * seq
+    E = moe_lib.padded_experts(cfg.num_experts)
+    validate_ep(E, T, ep, num_experts_raw=cfg.num_experts)
+    El, Tl = E // ep, T // ep
+    k, d = cfg.top_k, cfg.d_model
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    M = Tl * k                                   # per-device assignment rows
+    payload = 2 * M * d * itemsize               # rows out + results back
+    off_frac = 1.0 - 1.0 / ep
+    return {
+        "ep": ep,
+        "local_experts": El,
+        "rows_per_device": M,
+        "a2a_payload_bytes": payload,
+        "a2a_expected_wire_bytes": int(payload * off_frac),
+        "a2a_buffer_bytes": 2 * ep * M * d * itemsize,
+        "local_gemm_rows": round_up(ep * M + El * (block_m - 1), block_m),
+    }
+
+
 def attention_backward_cost(cfg: ModelConfig, batch: int, seq: int,
                             causal: bool = True,
                             window: Optional[int] = None,

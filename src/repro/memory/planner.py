@@ -53,6 +53,9 @@ class MemoryPlan:
     # per-attention-layer backward cost (estimator.attention_backward_cost);
     # None for attention-free families
     attn_bwd: Optional[dict] = None
+    # per-MoE-layer expert-parallel a2a comm cost (estimator.ep_a2a_cost);
+    # None unless cfg.expert_parallel > 0
+    moe_ep: Optional[dict] = None
 
     def report(self) -> str:
         e = self.est
@@ -80,6 +83,15 @@ class MemoryPlan:
                 f"{f['transient_bytes'] / GiB:.4f} GiB "
                 f"(residuals {d['residual_bytes'] / GiB:.2f} -> "
                 f"{f['residual_bytes'] / GiB:.2f} GiB, use_flash_kernel)")
+        if self.moe_ep is not None:
+            m = self.moe_ep
+            lines.append(
+                f"  moe EP a2a/layer (ep={m['ep']}, "
+                f"{m['local_experts']} experts/device): payload "
+                f"{m['a2a_payload_bytes'] / GiB:.3f} GiB/device "
+                f"(∝ 1/EP), expected wire "
+                f"{m['a2a_expected_wire_bytes'] / GiB:.3f} GiB, "
+                f"dense-emulation buffer {m['a2a_buffer_bytes'] / GiB:.3f} GiB")
         verdict = "FITS" if self.fits else (
             f"DOES NOT FIT (over by {(self.device_bytes - self.budget_bytes) / GiB:.2f} GiB"
             + (", try --optimizer lomo" if self.optimizer != "lomo" else "")
@@ -130,6 +142,8 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
     recompute = "reversible" if cfg.reversible else "remat"
     attn_bwd = (None if cfg.family == "ssm"
                 else est_mod.attention_backward_cost(cfg, batch, seq))
+    moe_ep = (est_mod.ep_a2a_cost(cfg, batch, seq)
+              if cfg.expert_parallel > 0 else None)
 
     def cost(policies: List[str]) -> int:
         if not trace_check:
@@ -154,7 +168,7 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
             arch=cfg.name, batch=batch, seq=seq, optimizer=optimizer,
             budget_bytes=budget, policies=policies, est=e,
             device_bytes=device, host_bytes=e.host_total(policies),
-            fits=device <= budget, attn_bwd=attn_bwd)
+            fits=device <= budget, attn_bwd=attn_bwd, moe_ep=moe_ep)
         if best.fits:
             return best
     return best

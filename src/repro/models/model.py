@@ -582,6 +582,18 @@ class Model:
         assert cfg.moe_backend in moe_lib.MOE_BACKENDS, (
             f"unknown moe_backend {cfg.moe_backend!r}; "
             f"known: {moe_lib.MOE_BACKENDS}")
+        if cfg.expert_parallel > 0:
+            # fail at construction, not deep inside a trace: EP needs MoE
+            # layers and an expert axis every device can own a slice of
+            if cfg.num_experts == 0:
+                raise ValueError(
+                    f"{cfg.name}: expert_parallel={cfg.expert_parallel} "
+                    f"requires an MoE config (num_experts > 0)")
+            from repro.kernels.moe.ep import validate_ep
+            validate_ep(moe_lib.padded_experts(cfg.num_experts),
+                        num_tokens=0,       # token count checked per call
+                        ep=cfg.expert_parallel,
+                        num_experts_raw=cfg.num_experts)
         self.cfg = cfg
         self.stacks, self.shared_specs = _BUILDERS[cfg.family](cfg)
         d = cfg.d_model

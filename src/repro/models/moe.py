@@ -15,6 +15,14 @@ backends + shared experts.
   on TPU, pure-JAX tiled fallback elsewhere), gate-weighted combine.  No
   capacity, no drops, no dispatch tensor.
 
+``cfg.expert_parallel > 0`` overrides the backend choice with the expert-
+parallel dispatch path (repro.kernels.moe.ep, DESIGN.md §10): experts and
+tokens shard over the mesh "expert" axis, a shard_map all-to-all routes
+token rows to their expert's device, and each device runs the grouped GEMMs
+over its local experts.  Numerically it is the grouped backend (same
+permute/GEMM/f32-combine chain), distributed.  Requires the launcher/test
+to install the mesh via ``repro.core.settings.set_ep_mesh``.
+
 Experts are zero-padded to a multiple of 16 (EP_PAD) so the expert axis
 divides the `model` mesh axis (padded experts are masked to -inf in the
 router and receive no tokens).
@@ -143,18 +151,51 @@ def _einsum_dispatch(p, cfg: ModelConfig, xf, probs, gate_vals, expert_idx,
     return y, aux.astype(jnp.float32)
 
 
+def _switch_aux(cfg: ModelConfig, probs, expert_idx):
+    """Global (ungrouped) Switch load-balancing statistic, shared by the
+    grouped and expert-parallel dispatch paths."""
+    E = padded_experts(cfg.num_experts)
+    frac = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
+                            axis=1), axis=0)                 # (E,)
+    aux = cfg.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return aux.astype(jnp.float32)
+
+
 def _grouped_dispatch(p, cfg: ModelConfig, xf, probs, gate_vals, expert_idx):
     """Sort-based dropless dispatch (repro.kernels.moe).  No capacity: every
     (token, k) assignment executes.  Returns (y (T, d), aux scalar f32)."""
     from repro.kernels.moe import grouped_expert_ffn
-    E = padded_experts(cfg.num_experts)
     y = grouped_expert_ffn(xf, expert_idx, gate_vals.astype(xf.dtype),
                            p["w_gate"], p["w_up"], p["w_down"])
-    # same Switch aux statistic, computed globally (no token groups here)
-    frac = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
-                            axis=1), axis=0)                 # (E,)
-    aux = cfg.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
-    return y, aux.astype(jnp.float32)
+    return y, _switch_aux(cfg, probs, expert_idx)
+
+
+def _ep_dispatch(p, cfg: ModelConfig, xf, probs, gate_vals, expert_idx):
+    """Expert-parallel dispatch over the mesh "expert" axis (kernels/moe/ep,
+    DESIGN.md §10).  Dropless like the grouped backend; the expert GEMMs run
+    on the device owning each expert, fed by a shard_map all-to-all."""
+    from repro.core import settings
+    from repro.kernels.moe import ep as ep_lib
+    mesh = settings.EP_MESH
+    if mesh is None:
+        raise ValueError(
+            f"{cfg.name}: expert_parallel={cfg.expert_parallel} needs the "
+            f"device mesh (with an 'expert' axis) installed via "
+            f"repro.core.settings.set_ep_mesh(mesh) before tracing — the "
+            f"launchers do this from --ep; tests build one with "
+            f"make_debug_mesh(..., expert=N).")
+    E = padded_experts(cfg.num_experts)
+    ep_lib.validate_ep(E, xf.shape[0], cfg.expert_parallel,
+                       num_experts_raw=cfg.num_experts)
+    if ep_lib.EP_AXIS in mesh.axis_names \
+            and mesh.shape[ep_lib.EP_AXIS] != cfg.expert_parallel:
+        raise ValueError(
+            f"{cfg.name}: expert_parallel={cfg.expert_parallel} does not "
+            f"match the mesh '{ep_lib.EP_AXIS}' axis size "
+            f"{mesh.shape[ep_lib.EP_AXIS]}")
+    y = ep_lib.ep_expert_ffn(xf, expert_idx, gate_vals.astype(xf.dtype),
+                             p["w_gate"], p["w_up"], p["w_down"], mesh)
+    return y, _switch_aux(cfg, probs, expert_idx)
 
 
 def moe_apply(p, cfg: ModelConfig, x, *, group: Optional[int] = None,
@@ -167,7 +208,9 @@ def moe_apply(p, cfg: ModelConfig, x, *, group: Optional[int] = None,
     xf = x.reshape(T, d)
 
     probs, gate_vals, expert_idx = _route(p, cfg, xf)
-    if backend == "grouped":
+    if cfg.expert_parallel > 0:
+        y, aux = _ep_dispatch(p, cfg, xf, probs, gate_vals, expert_idx)
+    elif backend == "grouped":
         y, aux = _grouped_dispatch(p, cfg, xf, probs, gate_vals, expert_idx)
     else:
         g_size = min(group or GROUP, T)

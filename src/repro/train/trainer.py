@@ -23,6 +23,20 @@ def make_train_step(model, optimizer, *, n_micro: int = 1,
     microbatch).  ``save_memory`` is forwarded to ``model.loss`` — True /
     "half" / False, or a per-layer activation-policy list from the memory
     planner (repro.memory)."""
+    cfg = getattr(model, "cfg", None)
+    if cfg is not None and getattr(cfg, "expert_parallel", 0) > 0:
+        # validate here, where the step is assembled, instead of letting the
+        # first trace die inside the MoE layer's shard_map
+        from repro.core import settings
+        from repro.kernels.moe.ep import EP_AXIS
+        mesh = settings.EP_MESH
+        if mesh is None or EP_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"expert_parallel={cfg.expert_parallel} training needs a "
+                f"mesh with an '{EP_AXIS}' axis installed via "
+                f"repro.core.settings.set_ep_mesh(mesh) before building the "
+                f"train step (launchers do this from --ep); got "
+                f"{'no mesh' if mesh is None else mesh.axis_names}")
 
     def loss_fn(params, mbatch):
         return model.loss(params, mbatch, save_memory=save_memory)

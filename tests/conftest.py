@@ -1,11 +1,72 @@
+import os
+import subprocess
+import sys
+
 import jax
 import pytest
 
 # smoke tests / benches must see ONE device — the 512-device XLA flag is set
-# only inside repro.launch.dryrun (never globally here).
+# only inside repro.launch.dryrun (never globally here).  Tests that NEED a
+# real multi-device backend carry @pytest.mark.multidevice and are re-exec'd
+# in a subprocess with forced host devices (below), so the single-device
+# smoke tests stay undisturbed.
 jax.config.update("jax_enable_x64", False)
+
+#: sentinel marking the re-exec'd child (and the CI leg that pre-sets the
+#: device flags and runs `pytest -m multidevice` in-process)
+MULTIDEVICE_ENV = "REPRO_MULTIDEVICE_CHILD"
+MULTIDEVICE_DEVICES = 8
 
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs a multi-device jax backend; re-exec'd in a "
+        f"subprocess with XLA_FLAGS=--xla_force_host_platform_device_count="
+        f"{MULTIDEVICE_DEVICES} unless {MULTIDEVICE_ENV} is already set")
+
+
+@pytest.hookimpl(tryfirst=True)
+def pytest_pyfunc_call(pyfuncitem):
+    """Run @multidevice tests in a forced-8-device CPU subprocess.
+
+    The parent process keeps its single-device backend (jax device state is
+    frozen at first use — the flag cannot be applied retroactively), so the
+    only way to give these tests a real mesh without disturbing everything
+    else is a fresh interpreter.  The child sees ``MULTIDEVICE_ENV`` and
+    runs the test body in-process; failures propagate with the child's tail.
+    """
+    if pyfuncitem.get_closest_marker("multidevice") is None:
+        return None
+    if os.environ.get(MULTIDEVICE_ENV):
+        return None                      # child (or CI leg): run normally
+
+    root = str(pyfuncitem.config.rootpath)
+    env = dict(os.environ)
+    env[MULTIDEVICE_ENV] = "1"
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{MULTIDEVICE_DEVICES}")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         "-p", "no:cacheprovider", pyfuncitem.nodeid],
+        cwd=root, env=env, capture_output=True, text=True, timeout=900)
+    combined = (proc.stdout + "\n" + proc.stderr).strip()
+    # a child-side skip (or a collection that never ran the body) also exits
+    # 0 — require an actual pass so it can't masquerade as one
+    import re
+    passed = re.search(r"\b[1-9]\d* passed\b", combined)
+    if proc.returncode != 0 or not passed:
+        tail = "\n".join(combined.splitlines()[-60:])
+        what = "failed" if proc.returncode != 0 else \
+            "exited 0 without a passing test (skipped?)"
+        raise AssertionError(
+            f"multidevice subprocess {what}: {pyfuncitem.nodeid}\n{tail}")
+    return True                          # handled — skip the in-process call
