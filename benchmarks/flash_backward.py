@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import json
 import time
 
 import jax
@@ -29,6 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ARCHS, get_config
 from repro.kernels import ops, ref
 from repro.memory.estimator import attention_backward_cost
+from repro.obs import write_bench_json
 
 ATTN_ARCHS = [a for a in ARCHS if get_config(a).family != "ssm"]
 
@@ -134,8 +134,8 @@ def main():
               f"{red['flash']['residual_bytes'] / 2**20:.2f} MiB  "
               f"parity {row['parity_max_abs_err']:.2e}", flush=True)
 
-    with open(args.out, "w") as f:
-        json.dump(results, f, indent=1)
+    write_bench_json(args.out, "flash_backward", results,
+                     config=getattr(args, "arch", None))
     print(f"wrote {args.out}")
 
     bad = 0

@@ -19,7 +19,6 @@ Three measurements per MoE config, written to BENCH_moe_dispatch.json:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -29,6 +28,7 @@ from repro.configs.base import ARCHS, get_config
 from repro.memory.estimator import moe_dispatch_cost
 from repro.models import moe as moe_lib
 from repro.models.spec import initialize
+from repro.obs import write_bench_json
 
 MOE_ARCHS = [a for a in ARCHS if get_config(a).family == "moe"]
 
@@ -120,8 +120,8 @@ def main():
               f"{red['grouped']['residual_bytes'] / 2**20:.2f} MiB  "
               f"parity {row['parity_max_abs_err']:.2e}", flush=True)
 
-    with open(args.out, "w") as f:
-        json.dump(results, f, indent=1)
+    write_bench_json(args.out, "moe_dispatch", results,
+                     config=getattr(args, "arch", None))
     print(f"wrote {args.out}")
 
     bad = 0

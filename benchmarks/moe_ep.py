@@ -31,7 +31,6 @@ train_4k microbatch (estimator.ep_a2a_cost; nothing allocated).
         [--out BENCH_moe_ep.json] [--batch 2] [--seq 256]
 """
 import argparse
-import json
 import time
 
 import jax
@@ -45,6 +44,7 @@ from repro.launch.mesh import make_debug_mesh
 from repro.memory.estimator import ep_a2a_cost
 from repro.models import moe as moe_lib
 from repro.models.spec import initialize
+from repro.obs import write_bench_json
 
 ARCH = "qwen2-moe-a2.7b"
 EP_SWEEP = (1, 2, 4)
@@ -139,8 +139,8 @@ def main():
               f"hlo-a2a {row['hlo_a2a_bytes'] / 2**20:.2f} MiB  "
               f"recompiles {row['recompiles_after_warmup']}", flush=True)
 
-    with open(args.out, "w") as f:
-        json.dump(rows, f, indent=1)
+    write_bench_json(args.out, "moe_ep", rows,
+                     config=getattr(args, "arch", None))
     print(f"wrote {args.out}")
 
     bad = []

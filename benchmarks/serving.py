@@ -7,11 +7,13 @@ the pre-overhaul per-step-sync engine (host argmax + device round-trip every
 step, per-request prefill that recompiles per prompt length), reimplemented
 here verbatim as ``_LegacyEngine``.
 
-Written to BENCH_serving.json, with three gates:
+Written to BENCH_serving.json (via the shared ``repro.obs`` bench writer:
+schema-versioned, host/device-stamped), with three gates:
 
   * **zero recompiles after warmup**: the engine's jitted entry points
     (fused decode+sample step, bucketed prefill+admit) compile nothing new
-    across the whole mixed-length main run — asserted via jit cache stats;
+    across the whole mixed-length main run — asserted via the engine's
+    recompile watchdog (``serve.recompiles_post_warmup`` counter);
   * **sampled decode matches greedy at temperature=0**: the on-device
     sampling path at zero temperature reproduces the host-argmax reference
     token-for-token;
@@ -25,7 +27,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 from collections import deque
 
@@ -184,10 +185,13 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="smaller workload (CI)")
     ap.add_argument("--slots", type=int, default=0)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="also write the engine's telemetry JSONL to PATH")
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
+    from repro import obs
     from repro.configs.base import get_config
     from repro.models.model import Model
     from repro.serving.engine import Request, ServingEngine
@@ -203,8 +207,12 @@ def main():
     wl = make_workload(cfg, n=n_req, rate_hz=6.0, pmin=4, pmax=pmax,
                        gmin=2, gmax=gmax, temperature=0.7, seed=1)
 
+    # one telemetry stream for the whole benchmark: the engine's own
+    # counters/events ARE the gate inputs (no hand-rolled jit-stat math)
+    tel = obs.Telemetry(path=args.telemetry, role="serve-bench",
+                        config=args.arch, quick=args.quick)
     eng = ServingEngine(model, params, slots=slots, buf_len=buf,
-                        drain_every=4)
+                        drain_every=4, telemetry=tel)
 
     # ---- warmup: touch every bucket in the workload, then freeze jit stats
     buckets = sorted({eng._bucket(p.size) for p in wl.prompts})
@@ -215,7 +223,7 @@ def main():
                            seed=i))
     eng.run()
     eng.done.clear()
-    warm_jit = eng.jit_cache_sizes()
+    warm_jit = eng.mark_warm()
 
     # ---- main run: Poisson arrivals, mixed lengths, sampled decode
     reqs = _requests(wl, lambda uid, prompt, max_new_tokens: Request(
@@ -224,7 +232,13 @@ def main():
     wall, tok_lat, req_lat, n_tok = drive(eng, wl, reqs,
                                           steps_per_call=eng.drain_every)
     final_jit = eng.jit_cache_sizes()
-    recompiles = sum(final_jit.values()) - sum(warm_jit.values())
+    recompiles = tel.counter("serve.recompiles_post_warmup").value
+    # engine-measured per-request latencies (main run only; warmup uids
+    # were drained before mark_warm so their events precede this slice)
+    req_events = [e for e in tel.sink.events if e["kind"] == "serve_request"
+                  and e["uid"] < 10_000]
+    ttft = [e["ttft_s"] for e in req_events if "ttft_s" in e]
+    tpot = [e["tpot_s"] for e in req_events if "tpot_s" in e]
 
     # ---- legacy engine on the same workload, greedy (it has no sampler)
     leg = _LegacyEngine(model, params, slots=slots, buf_len=buf)
@@ -267,6 +281,10 @@ def main():
                    "token_lat_p99_ms": _pct(tok_lat, 99) * 1e3,
                    "request_lat_p50_ms": _pct(req_lat, 50) * 1e3,
                    "request_lat_p99_ms": _pct(req_lat, 99) * 1e3,
+                   "ttft_p50_ms": _pct(ttft, 50) * 1e3,
+                   "ttft_p99_ms": _pct(ttft, 99) * 1e3,
+                   "tpot_p50_ms": _pct(tpot, 50) * 1e3,
+                   "tpot_p99_ms": _pct(tpot, 99) * 1e3,
                    "jit_cache_warm": warm_jit, "jit_cache_final": final_jit},
         "legacy": {"tok_s": leg_tok_s, "wall_s": leg_wall,
                    "tokens": leg_tok},
@@ -274,8 +292,8 @@ def main():
                   "greedy_parity_ok": bool(parity_ok),
                   "throughput_ratio": tok_s / leg_tok_s},
     }
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
+    tel.close()
+    obs.write_bench_json(args.out, "serving", result, config=args.arch)
 
     print(f"[serving] engine {tok_s:.1f} tok/s "
           f"(p50 {result['engine']['token_lat_p50_ms']:.0f} ms, "

@@ -11,14 +11,20 @@ memory_analysis in EXPERIMENTS.md):
 Methods: RevFFN (reversible, O(1) residuals), SFT+ckpt (standard blocks,
 remat), LoRA / DoRA / (IA)3 (frozen base; adapter-only grads), LoMo (SGD,
 zero optimizer state), GaLore (low-rank optimizer state).
+
+Timing runs through ``repro.obs`` fenced spans (block_until_ready inside the
+span, so measured time is device work) and the per-method step-time lands in
+the shared registry; results are written to BENCH_table1_memory.json via the
+schema-versioned bench writer (``--out``).
 """
 from __future__ import annotations
 
-import time
+import argparse
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import get_config
 from repro.core import adapters as ad
 from repro.models.model import Model
@@ -40,18 +46,22 @@ def _opt_state_bytes(state):
                for x in jax.tree_util.tree_leaves(state))
 
 
-def _throughput(step, params, opt_state, batch, iters=3):
+def _throughput(step, params, opt_state, batch, tel, name, iters=3):
+    """Samples/s of ``step``, timed by a fenced telemetry span (the fence
+    blocks on the last iteration's loss, so the span covers device work);
+    the per-method duration lands in the ``span.table1.<name>`` histogram."""
     params, opt_state, _ = step(params, opt_state, batch)   # compile
     jax.block_until_ready(params)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        params, opt_state, m = step(params, opt_state, batch)
-    jax.block_until_ready(m["loss"])
-    dt = (time.perf_counter() - t0) / iters
-    return batch["tokens"].shape[0] / dt
+    m = None
+    with tel.span(f"table1.{name}", fence=lambda: m["loss"],
+                  iters=iters) as sp:
+        for _ in range(iters):
+            params, opt_state, m = step(params, opt_state, batch)
+    return batch["tokens"].shape[0] / (sp["dur_s"] / iters)
 
 
-def run(B=4, S=256):
+def run(B=4, S=256, tel=None):
+    tel = obs.as_telemetry(tel)
     cfg_rev = get_config("qwen2-moe-a2.7b", reduced=True).replace(
         num_layers=4, dtype="float32")
     cfg_sft = cfg_rev.replace(reversible=False, remat_policy="block")
@@ -67,7 +77,7 @@ def run(B=4, S=256):
         res = _residual_bytes(lambda p: model.loss(p, batch), params)
         ost = opt.init(params)
         step = jax.jit(make_train_step(model, opt))
-        tput = _throughput(step, params, ost, batch)
+        tput = _throughput(step, params, ost, batch, tel, name)
         rows.append((name, res / 2**20, _opt_state_bytes(ost) / 2**20, tput))
 
     full_ft_row("SFT", cfg_sft_nockpt, AdamW(lr=1e-4))
@@ -96,7 +106,7 @@ def run(B=4, S=256):
             l, g = jax.value_and_grad(loss_fn)(p)
             p, o = opt.update(g, o, p)
             return p, o, {"loss": l, "step": o["step"]}
-        tput = _throughput(peft_step, peft, ost, batch)
+        tput = _throughput(peft_step, peft, ost, batch, tel, name)
         rows.append((name, res / 2**20, _opt_state_bytes(ost) / 2**20, tput))
 
     return rows
@@ -137,16 +147,36 @@ def validate_estimator(B=4, S=256, tol=0.10):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_table1_memory.json")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="also write the span-level telemetry JSONL to PATH")
+    args = ap.parse_args()
+
+    tel = obs.Telemetry(path=args.telemetry, role="table1-bench",
+                        config="qwen2-moe-a2.7b")
     print("method,residual_MiB,opt_state_MiB,samples_per_s")
-    for name, res, ost, tput in run():
+    rows = run(tel=tel)
+    for name, res, ost, tput in rows:
         print(f"{name},{res:.1f},{ost:.1f},{tput:.2f}")
     print("\nestimator validation (static prediction vs measured):")
     bad = 0
-    for label, pred, meas, ok in validate_estimator():
+    est_rows = validate_estimator()
+    for label, pred, meas, ok in est_rows:
         bad += not ok
         print(f"  {label:<20} predicted {pred / 2**20:9.2f} MiB  "
               f"measured {meas / 2**20:9.2f} MiB  "
               f"{'OK' if ok else 'MISMATCH'}")
+    tel.close()
+    obs.write_bench_json(args.out, "table1_memory", {
+        "rows": [{"method": n, "residual_MiB": r, "opt_state_MiB": o,
+                  "samples_per_s": t} for n, r, o, t in rows],
+        "estimator_validation": [
+            {"label": lb, "predicted_bytes": p, "measured_bytes": m,
+             "ok": bool(ok)} for lb, p, m, ok in est_rows],
+        "gates": {"estimator_mismatches": bad},
+    }, config="qwen2-moe-a2.7b")
+    print(f"wrote {args.out}")
     return 1 if bad else 0
 
 

@@ -34,6 +34,15 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--drain-every", type=int, default=4)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write a telemetry JSONL to PATH: per-request "
+                         "TTFT/TPOT, queue depth / slot utilization gauges, "
+                         "prefill+decode spans, and a post-warmup recompile "
+                         "watchdog (repro.obs; inspect with `python -m "
+                         "repro.launch.trace summarize PATH`)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the per-bucket warmup pass (the recompile "
+                         "watchdog then has no baseline)")
     args = ap.parse_args()
 
     import jax
@@ -53,14 +62,37 @@ def main():
         extras = {"img": jax.random.normal(
             jax.random.PRNGKey(2), (1, cfg.num_image_tokens, cfg.d_model))}
 
+    from repro import obs
+
+    tel = obs.as_telemetry(args.telemetry, role="serve", config=cfg.name,
+                           slots=args.slots, drain_every=args.drain_every)
     buf = args.buf_len or (args.prompt_len + args.gen)
     eng = ServingEngine(model, params, slots=args.slots, buf_len=buf,
-                        extras=extras, drain_every=args.drain_every)
+                        extras=extras, drain_every=args.drain_every,
+                        telemetry=tel)
 
     rng = np.random.default_rng(0)
+    prompts = []
     for uid in range(args.requests):
         plen = int(rng.integers(4, max(5, args.prompt_len + 1)))
-        prompt = rng.integers(4, cfg.vocab_size, size=plen).astype(np.int32)
+        prompts.append(rng.integers(4, cfg.vocab_size,
+                                    size=plen).astype(np.int32))
+
+    if not args.no_warmup:
+        # touch every prefill bucket the workload will use, then freeze the
+        # expected compiled-signature set: any further compile is flagged by
+        # the recompile watchdog (serve.recompiles_post_warmup must stay 0)
+        buckets = sorted({eng._bucket(p.size) for p in prompts})
+        for i, b in enumerate(buckets):
+            eng.submit(Request(uid=1_000_000 + i,
+                               prompt=(np.arange(b, dtype=np.int32) % 60) + 4,
+                               max_new_tokens=2, eos_id=-1,
+                               temperature=args.temperature, seed=i))
+        eng.run()
+        eng.done.clear()
+    eng.mark_warm()
+
+    for uid, prompt in enumerate(prompts):
         eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.gen,
                            eos_id=-1, temperature=args.temperature,
                            top_k=args.top_k, top_p=args.top_p, seed=uid))
@@ -74,9 +106,15 @@ def main():
           f"drain_every={args.drain_every}, "
           f"temperature={args.temperature}, top_k={args.top_k}, "
           f"top_p={args.top_p})")
-    print(f"[serve] jit cache: {eng.jit_cache_sizes()}")
+    print(f"[serve] jit cache: {eng.jit_cache_sizes()} "
+          f"(post-warmup recompiles: "
+          f"{tel.counter('serve.recompiles_post_warmup').value if tel.enabled else 'n/a'})")
     sample = done[0].generated[:12]
     print(f"[serve] request 0 tokens: {sample}")
+    if tel.enabled:
+        tel.close()
+        print(f"[serve] telemetry -> {args.telemetry} "
+              f"(python -m repro.launch.trace summarize {args.telemetry})")
 
 
 if __name__ == "__main__":

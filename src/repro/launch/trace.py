@@ -1,0 +1,249 @@
+"""Telemetry run-file CLI: summarize / validate / export (DESIGN.md §11).
+
+    PYTHONPATH=src python -m repro.launch.trace summarize RUN.jsonl
+    PYTHONPATH=src python -m repro.launch.trace validate RUN.jsonl \
+        [--require-zero-recompiles] [--max-drift 2.0]
+    PYTHONPATH=src python -m repro.launch.trace export RUN.jsonl \
+        [--out trace.json]
+
+``summarize`` renders p50/p99 tables from the raw events (exact, not the
+bucket-resolution registry histograms): train step time / loss trajectory /
+throughput + MFU + memory drift, serving TTFT / TPOT / queue wait, span
+durations, compiles and checkpoint I/O.  ``validate`` applies the schema
+gates CI runs (see repro.obs.sink.validate_events).  ``export`` writes a
+chrome://tracing / Perfetto-compatible trace: spans become complete ("X")
+events on per-name tracks, gauges become counter ("C") tracks.
+
+No jax import: this must run on a machine that never saw the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+from repro.obs.sink import read_events, validate_events
+
+
+def _pct(xs: List[float], q: float) -> Optional[float]:
+    if not xs:
+        return None
+    xs = sorted(xs)
+    if len(xs) == 1:
+        return xs[0]
+    pos = q / 100.0 * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+
+def _fmt(v, unit="") -> str:
+    if v is None:
+        return "-"
+    if unit == "ms":
+        return f"{v * 1e3:.2f} ms"
+    if unit == "s":
+        return f"{v:.3f} s"
+    if unit == "x":
+        return f"{v:.3f}x"
+    if unit == "GiB":
+        return f"{v / 2**30:.3f} GiB"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table(title: str, rows: List[tuple], header=("metric", "count", "p50",
+                                                  "p99", "mean")):
+    if not rows:
+        return
+    widths = [max(len(str(r[i])) for r in [header] + rows)
+              for i in range(len(header))]
+    print(f"\n{title}")
+    print("  " + "  ".join(h.ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  " + "  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+
+
+def _lat_row(name: str, xs: List[float], unit="ms") -> tuple:
+    return (name, len(xs), _fmt(_pct(xs, 50), unit), _fmt(_pct(xs, 99), unit),
+            _fmt(sum(xs) / len(xs) if xs else None, unit))
+
+
+def _by_kind(events: List[dict]) -> Dict[str, List[dict]]:
+    out: Dict[str, List[dict]] = {}
+    for ev in events:
+        out.setdefault(ev.get("kind", "?"), []).append(ev)
+    return out
+
+
+def summarize(events: List[dict]) -> None:
+    kinds = _by_kind(events)
+    head = kinds.get("run_start", [{}])[0]
+    meta = head.get("meta", {})
+    print(f"run: role={head.get('role', '?')} config={head.get('config', '?')}"
+          f" schema v{head.get('v', '?')} | {meta.get('device_platform', '?')}"
+          f" x{meta.get('device_count', '?')} jax {meta.get('jax', '?')}"
+          f" on {meta.get('host', '?')}")
+    print(f"events: {len(events)} "
+          f"({', '.join(f'{k}:{len(v)}' for k, v in sorted(kinds.items()))})")
+
+    # ----- train
+    steps = kinds.get("train_step", [])
+    if steps:
+        steady = [e["step_s"] for e in steps if not e.get("compiled")]
+        compile_s = [e["step_s"] for e in steps if e.get("compiled")]
+        rows = [_lat_row("step_time (steady)", steady)]
+        if compile_s:
+            rows.append(_lat_row("step_time (compile)", compile_s))
+        _table("train", rows)
+        print(f"  loss: {steps[0]['loss']:.4f} -> {steps[-1]['loss']:.4f} "
+              f"over steps {steps[0]['step']}..{steps[-1]['step']}")
+    wins = kinds.get("train_window", [])
+    if wins:
+        last = wins[-1]
+        print(f"  last window: {_fmt(last.get('steps_per_s'))} steps/s, "
+              f"{_fmt(last.get('tokens_per_s'))} tok/s, "
+              f"mfu {_fmt(last.get('mfu'))}")
+        if last.get("mem_measured_peak_bytes") is not None:
+            print(f"  memory: measured peak "
+                  f"{_fmt(last['mem_measured_peak_bytes'], 'GiB')} vs "
+                  f"predicted {_fmt(last.get('mem_predicted_bytes'), 'GiB')}"
+                  f" -> drift {_fmt(last.get('mem_drift_x'), 'x')}")
+    saves = [e["dur_s"] for e in kinds.get("ckpt_save", [])]
+    restores = [e["dur_s"] for e in kinds.get("ckpt_restore", [])]
+    rows = []
+    if saves:
+        rows.append(_lat_row("ckpt_save", saves))
+    if restores:
+        rows.append(_lat_row("ckpt_restore", restores))
+    _table("checkpoint", rows)
+
+    # ----- serving
+    reqs = kinds.get("serve_request", [])
+    if reqs:
+        rows = [
+            _lat_row("ttft", [e["ttft_s"] for e in reqs if "ttft_s" in e]),
+            _lat_row("tpot", [e["tpot_s"] for e in reqs if "tpot_s" in e]),
+            _lat_row("queue_wait",
+                     [e["queue_s"] for e in reqs if "queue_s" in e]),
+            _lat_row("request_total",
+                     [e["total_s"] for e in reqs if "total_s" in e]),
+        ]
+        _table("serving", rows)
+        toks = sum(e.get("tokens", 0) for e in reqs)
+        print(f"  {len(reqs)} requests, {toks} tokens")
+    recompiles = kinds.get("recompile", [])
+    if kinds.get("warmup_done") or recompiles:
+        print(f"  post-warmup recompiles: {len(recompiles)}"
+              + ("".join(f"\n    {e.get('name')}: {e.get('baseline')} -> "
+                         f"{e.get('entries')}" for e in recompiles)))
+
+    # ----- spans / compiles
+    spans: Dict[str, List[float]] = {}
+    for ev in kinds.get("span", []):
+        spans.setdefault(ev["name"], []).append(ev["dur_s"])
+    _table("spans", [_lat_row(n, xs) for n, xs in sorted(spans.items())])
+    compiles = kinds.get("compile", [])
+    if compiles:
+        _table("jit compiles", [
+            (e.get("name"), 1, _fmt(e["dur_s"], "s"), "-", "-")
+            for e in compiles])
+
+
+def export_chrome_trace(events: List[dict], out_path: str) -> int:
+    """Spans -> "X" (complete) events, gauges/window rates -> "C" (counter)
+    tracks; timestamps are microseconds relative to run_start so Perfetto's
+    view starts at zero."""
+    t0 = events[0].get("ts", 0.0) if events else 0.0
+    trace = []
+    pid = 0
+    tids: Dict[str, int] = {}
+
+    def tid(track: str) -> int:
+        if track not in tids:
+            tids[track] = len(tids) + 1
+            trace.append({"ph": "M", "pid": pid, "tid": tids[track],
+                          "name": "thread_name", "args": {"name": track}})
+        return tids[track]
+
+    for ev in events:
+        kind = ev.get("kind")
+        ts_us = (ev.get("ts", t0) - t0) * 1e6
+        if kind == "span":
+            start = ev.get("t0")
+            start_us = (start - t0) * 1e6 if start is not None \
+                else ts_us - ev["dur_s"] * 1e6
+            trace.append({"ph": "X", "pid": pid, "tid": tid(ev["name"]),
+                          "name": ev["name"], "ts": start_us,
+                          "dur": ev["dur_s"] * 1e6,
+                          "args": {k: v for k, v in ev.items()
+                                   if k not in ("v", "kind", "ts", "t0",
+                                                "name", "dur_s")}})
+        elif kind in ("train_step", "ckpt_save", "ckpt_restore", "compile"):
+            name = {"train_step": "train_step", "compile": ev.get("name",
+                                                                 "compile"),
+                    "ckpt_save": "ckpt_save",
+                    "ckpt_restore": "ckpt_restore"}[kind]
+            dur = ev.get("step_s", ev.get("dur_s", 0.0))
+            trace.append({"ph": "X", "pid": pid, "tid": tid(kind),
+                          "name": name, "ts": ts_us - dur * 1e6,
+                          "dur": dur * 1e6,
+                          "args": {k: v for k, v in ev.items()
+                                   if k not in ("v", "kind", "ts")}})
+        elif kind == "train_window":
+            for key in ("steps_per_s", "tokens_per_s", "mfu", "mem_drift_x"):
+                if ev.get(key) is not None:
+                    trace.append({"ph": "C", "pid": pid, "name": key,
+                                  "ts": ts_us, "args": {key: ev[key]}})
+        elif kind == "serve_request":
+            if "ttft_s" in ev:
+                trace.append({"ph": "C", "pid": pid, "name": "ttft_ms",
+                              "ts": ts_us,
+                              "args": {"ttft_ms": ev["ttft_s"] * 1e3}})
+    with open(out_path, "w") as f:
+        json.dump({"traceEvents": trace, "displayTimeUnit": "ms"}, f)
+    return len(trace)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.trace")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name in ("summarize", "validate", "export"):
+        p = sub.add_parser(name)
+        p.add_argument("run", help="telemetry RUN.jsonl file")
+        if name == "validate":
+            p.add_argument("--require-zero-recompiles", action="store_true")
+            p.add_argument("--max-drift", type=float, default=None,
+                           help="bound the last-window estimator drift to "
+                                "[1/x, x]")
+        if name == "export":
+            p.add_argument("--out", default=None,
+                           help="output trace path (default: RUN.trace.json)")
+    args = ap.parse_args(argv)
+
+    events = read_events(args.run)
+    if args.cmd == "summarize":
+        summarize(events)
+        return 0
+    if args.cmd == "validate":
+        errors = validate_events(
+            events, require_zero_recompiles=args.require_zero_recompiles,
+            max_drift=args.max_drift)
+        if errors:
+            print(f"[trace] {args.run}: INVALID")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        print(f"[trace] {args.run}: OK ({len(events)} events, schema "
+              f"v{events[0].get('v')})")
+        return 0
+    out = args.out or (args.run.rsplit(".jsonl", 1)[0] + ".trace.json")
+    n = export_chrome_trace(events, out)
+    print(f"[trace] wrote {n} trace events -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

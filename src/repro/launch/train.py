@@ -27,6 +27,7 @@ def main():
                     choices=["adamw", "lomo", "galore"])
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--compress", action="store_true",
                     help="int8 gradient compression before reduction")
@@ -50,6 +51,13 @@ def main():
                     help="flash attention on the train path (Pallas fwd+bwd "
                          "kernels on TPU, tiled pure-JAX fallback here; "
                          "O(S) attention residuals, DESIGN.md §8)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write a schema-versioned telemetry JSONL to PATH: "
+                         "per-step loss/grad-norm/step-time, per-window "
+                         "throughput + MFU + estimator-drift memory gauges, "
+                         "compile and checkpoint durations (repro.obs; "
+                         "inspect with `python -m repro.launch.trace "
+                         "summarize PATH`)")
     args = ap.parse_args()
 
     if args.ep > 1:
@@ -97,7 +105,7 @@ def main():
                     host_id=jax.process_index())
     rc = RunConfig(total_steps=args.steps, stage1_steps=args.stage1,
                    ckpt_every=max(args.steps // 5, 1), ckpt_dir=args.ckpt_dir,
-                   log_every=10, n_micro=args.n_micro)
+                   log_every=args.log_every, n_micro=args.n_micro)
     memory_plan = None
     if args.plan or args.hbm_budget_gb is not None:
         from repro.memory.planner import plan as make_plan
@@ -107,7 +115,11 @@ def main():
         memory_plan = make_plan(cfg, budget_gb=args.hbm_budget_gb,
                                 batch=per_dev,
                                 seq=args.seq, optimizer=args.optimizer)
-    _, _, losses = train(model, opt, dc, rc, plan=memory_plan)
+    _, _, losses = train(model, opt, dc, rc, plan=memory_plan,
+                         telemetry=args.telemetry)
+    if args.telemetry:
+        print(f"[train] telemetry -> {args.telemetry} "
+              f"(python -m repro.launch.trace summarize {args.telemetry})")
     if losses:
         print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     else:

@@ -360,6 +360,53 @@ def attention_backward_cost(cfg: ModelConfig, batch: int, seq: int,
             "live_tile_fraction": live, "dense": dense, "flash": flash}
 
 
+#: train-step cost multiplier over forward FLOPs per activation policy
+#: (benchmarks/roofline.py's accounting: standard fwd+bwd = 3x fwd, remat
+#: re-runs forward = 4x, reversible adds inverse + re-linearise = 5x;
+#: offload moves bytes, not FLOPs, so it costs like store)
+TRAIN_FLOP_MULT = {"store": 3.0, "offload": 3.0, "remat": 4.0,
+                   "reversible": 5.0}
+
+
+def train_step_flops(model, batch: int, seq: int, save_memory=True) -> float:
+    """Achieved-FLOPs model for one optimizer step at (batch, seq) — the
+    numerator of the MFU gauge (repro.obs).  Forward is the standard
+    ``2 * n_params * tokens`` dense-equivalent (MoE expert params are all
+    counted: an upper bound that makes MFU conservative), scaled by the
+    per-policy train multiplier — averaged across units for a mixed plan."""
+    tokens = batch * seq
+    fwd = 2.0 * model.num_params() * tokens
+    cfg = model.cfg
+    if isinstance(save_memory, (list, tuple)):
+        mults = [TRAIN_FLOP_MULT.get(p, 3.0) for p in save_memory]
+        mult = sum(mults) / max(len(mults), 1)
+    elif save_memory and cfg.reversible:
+        mult = TRAIN_FLOP_MULT["reversible"]
+    else:
+        mult = TRAIN_FLOP_MULT["store"]
+    return mult * fwd
+
+
+#: nominal peak FLOP/s per device platform for the MFU denominator (TPU v5e
+#: bf16 MXU; A100-class bf16; a token CPU figure so reduced smoke runs emit
+#: a finite, obviously-not-hardware-bound gauge).  Override with the
+#: REPRO_PEAK_FLOPS env var on other hardware.
+PEAK_FLOPS_BY_PLATFORM = {"tpu": 197e12, "gpu": 312e12, "cpu": 1e11}
+
+
+def peak_flops() -> float:
+    import os
+    env = os.environ.get("REPRO_PEAK_FLOPS")
+    if env:
+        return float(env)
+    try:
+        platform = jax.devices()[0].platform
+    except Exception:  # noqa: BLE001
+        platform = "cpu"
+    return PEAK_FLOPS_BY_PLATFORM.get(platform,
+                                      PEAK_FLOPS_BY_PLATFORM["cpu"])
+
+
 def device_memory_stats() -> Optional[dict]:
     """Live allocator stats of device 0 (None on backends without them, e.g.
     CPU) — the runtime cross-check for the static estimates."""

@@ -1,0 +1,129 @@
+"""Compile observability: a guarded jit-cache probe and a jit wrapper that
+counts compilations and records compile time per entry point.
+
+``jit_cache_size`` replaces direct use of the private ``_cache_size()`` attr
+(which raises ``AttributeError`` on JAX versions that rename it): it probes
+the known spellings and degrades to a ``-1`` sentinel instead of taking the
+caller down — recompile telemetry then reports "unknown" rather than
+crashing the engine.
+
+``instrument_jit`` wraps an already-jitted callable: every call that grows
+the jit cache is counted as a compilation, with that call's wall time
+recorded as the compile time (tracing + lowering + compile dominate such
+calls by orders of magnitude).  When the cache probe is unavailable (-1),
+only the first call is counted — a documented lower bound.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+
+def jit_cache_size(fn) -> int:
+    """Compiled-signature count of a jitted callable; ``-1`` if this JAX
+    version exposes no probe (never raises)."""
+    probe = getattr(fn, "_cache_size", None)
+    if callable(probe):
+        try:
+            return int(probe())
+        except Exception:  # noqa: BLE001 — any probe failure -> sentinel
+            pass
+    cache = getattr(fn, "_cache", None)
+    if cache is not None:
+        try:
+            return len(cache)
+        except TypeError:
+            pass
+    return -1
+
+
+class InstrumentedJit:
+    """Transparent wrapper around a jitted callable.  Emits a ``compile``
+    event (name, entry count, wall seconds) and bumps the
+    ``jit.compiles.<name>`` counter whenever a call compiles a new entry;
+    unknown attributes forward to the wrapped function so probes like
+    ``jit_cache_size`` keep working on the wrapper itself."""
+
+    def __init__(self, fn, name: str, telemetry=None):
+        self._fn = fn
+        self.name = name
+        self.telemetry = telemetry
+        self.compiles = 0
+        self.compile_s = 0.0
+        self.last_call_compiled = False
+
+    def __call__(self, *args, **kwargs):
+        before = jit_cache_size(self._fn)
+        t0 = time.perf_counter()
+        out = self._fn(*args, **kwargs)
+        dt = time.perf_counter() - t0
+        after = jit_cache_size(self._fn)
+        if before < 0 or after < 0:
+            compiled = self.compiles == 0      # probe-less: first call only
+        else:
+            compiled = after > before
+        self.last_call_compiled = compiled
+        if compiled:
+            self.compiles += 1
+            self.compile_s += dt
+            if self.telemetry is not None:
+                self.telemetry.counter(f"jit.compiles.{self.name}").inc()
+                self.telemetry.emit("compile", name=self.name, dur_s=dt,
+                                    entries=after)
+        return out
+
+    def cache_size(self) -> int:
+        return jit_cache_size(self._fn)
+
+    def __getattr__(self, item):
+        return getattr(self._fn, item)
+
+
+def instrument_jit(fn, name: str, telemetry=None) -> InstrumentedJit:
+    return InstrumentedJit(fn, name, telemetry)
+
+
+class RecompileWatchdog:
+    """Flags any compile after ``mark_warm()``.  Built on cache-size deltas
+    of named entry points (engine step/admit, train step stages): after the
+    warmup phase freezes the expected signature set, every further growth is
+    counted in ``<scope>.recompiles_post_warmup`` and emitted as a
+    ``recompile`` event naming the entry point — the serving benchmark and
+    the CI validator gate on this staying zero."""
+
+    def __init__(self, fns: dict, telemetry=None, scope: str = "serve"):
+        self.fns = dict(fns)
+        self.telemetry = telemetry
+        self.scope = scope
+        self.warm: Optional[dict] = None
+
+    def sizes(self) -> dict:
+        return {name: jit_cache_size(fn) for name, fn in self.fns.items()}
+
+    def mark_warm(self) -> dict:
+        self.warm = self.sizes()
+        if self.telemetry is not None:
+            self.telemetry.emit("warmup_done", scope=self.scope,
+                                jit_cache=self.warm)
+        return self.warm
+
+    def check(self) -> int:
+        """Returns the number of NEW post-warmup compiles since the last
+        check (0 before ``mark_warm``), updating the baseline so each
+        compile is counted exactly once."""
+        if self.warm is None:
+            return 0
+        now = self.sizes()
+        new = 0
+        for name, n in now.items():
+            base = self.warm.get(name, 0)
+            if n > base >= 0:
+                new += n - base
+                if self.telemetry is not None:
+                    self.telemetry.emit("recompile", scope=self.scope,
+                                        name=name, entries=n, baseline=base)
+            self.warm[name] = n
+        if new and self.telemetry is not None:
+            self.telemetry.counter(
+                f"{self.scope}.recompiles_post_warmup").inc(new)
+        return new

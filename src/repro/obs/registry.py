@@ -1,0 +1,163 @@
+"""Metric registry: counters, gauges, fixed-bucket histograms.
+
+Dependency-free (stdlib only) and allocation-light: instruments are plain
+python objects the hot loops mutate; nothing here touches jax.  Snapshots
+are JSON-ready dicts the sink serialises verbatim, so the on-disk schema is
+exactly what ``Registry.snapshot()`` returns (DESIGN.md §11).
+
+Instruments are created idempotently by name — ``registry.counter("x")``
+returns the same object every call — so call sites never need to thread
+instrument handles around; re-registering a name as a different kind is a
+programming error and raises.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+#: default histogram bucket upper bounds (seconds): 0.5 ms .. ~2 min,
+#: roughly x2 per bucket — covers kernel dispatch through full-config steps
+DEFAULT_TIME_BUCKETS_S: List[float] = [
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+    0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0,
+]
+
+
+class Counter:
+    """Monotonically increasing count."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1):
+        if n < 0:
+            raise ValueError(f"counter {self.name}: negative increment {n}")
+        self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    """Last-set value with built-in high/low-water tracking (the memory
+    watchdog's peak gauge is just ``.max`` of a sampled gauge)."""
+
+    __slots__ = ("name", "value", "max", "min")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: Optional[float] = None
+        self.max: Optional[float] = None
+        self.min: Optional[float] = None
+
+    def set(self, v: float):
+        v = float(v)
+        self.value = v
+        self.max = v if self.max is None else max(self.max, v)
+        self.min = v if self.min is None else min(self.min, v)
+
+    def snapshot(self):
+        return {"value": self.value, "max": self.max, "min": self.min}
+
+
+class Histogram:
+    """Fixed-bucket histogram: ``buckets`` are sorted upper bounds; one
+    overflow bucket catches everything beyond the last bound.  Exact
+    count/sum/min/max ride along so means are exact even though percentiles
+    are bucket-resolution estimates."""
+
+    __slots__ = ("name", "buckets", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, name: str, buckets: Optional[Sequence[float]] = None):
+        self.name = name
+        bs = list(buckets if buckets is not None else DEFAULT_TIME_BUCKETS_S)
+        if bs != sorted(bs) or len(set(bs)) != len(bs):
+            raise ValueError(f"histogram {name}: buckets must be strictly "
+                             f"increasing, got {bs}")
+        self.buckets = bs
+        self.counts = [0] * (len(bs) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def observe(self, v: float):
+        v = float(v)
+        if math.isnan(v):
+            raise ValueError(f"histogram {self.name}: observed NaN")
+        i = 0
+        while i < len(self.buckets) and v > self.buckets[i]:
+            i += 1
+        self.counts[i] += 1
+        self.count += 1
+        self.sum += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    def percentile(self, q: float) -> Optional[float]:
+        """Bucket-resolution percentile (upper bound of the bucket holding
+        rank q); exact min/max for q at the extremes."""
+        if self.count == 0:
+            return None
+        if q <= 0:
+            return self.min
+        if q >= 100:
+            return self.max
+        rank = q / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank:
+                if i < len(self.buckets):
+                    return min(self.buckets[i], self.max)
+                return self.max
+        return self.max
+
+    @property
+    def mean(self) -> Optional[float]:
+        return self.sum / self.count if self.count else None
+
+    def snapshot(self):
+        return {"buckets": self.buckets, "counts": list(self.counts),
+                "count": self.count, "sum": self.sum,
+                "min": self.min, "max": self.max}
+
+
+class Registry:
+    """Named instrument store; one per run (the ``Telemetry`` facade owns
+    it).  ``snapshot()`` is the wire format flushed into ``metrics`` /
+    ``run_end`` events."""
+
+    def __init__(self):
+        self._instruments: Dict[str, object] = {}
+
+    def _get(self, name: str, cls, *args):
+        inst = self._instruments.get(name)
+        if inst is None:
+            inst = cls(name, *args)
+            self._instruments[name] = inst
+        elif not isinstance(inst, cls):
+            raise ValueError(f"instrument {name!r} already registered as "
+                             f"{type(inst).__name__}, not {cls.__name__}")
+        return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+        return self._get(name, Histogram, buckets)
+
+    def snapshot(self) -> dict:
+        out = {"counters": {}, "gauges": {}, "histograms": {}}
+        for name, inst in sorted(self._instruments.items()):
+            kind = {Counter: "counters", Gauge: "gauges",
+                    Histogram: "histograms"}[type(inst)]
+            out[kind][name] = inst.snapshot()
+        return out

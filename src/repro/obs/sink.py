@@ -1,0 +1,209 @@
+"""JSONL event sink + schema validation + the shared BENCH_*.json writer.
+
+One run = one JSONL file: the first line is a ``run_start`` event carrying
+the schema version and host/device/config identity; every subsequent line is
+a self-contained event (``{"v": 1, "kind": ..., "ts": <unix s>, ...}``).
+Events are append-only and flushed per line, so a killed run leaves a valid
+prefix — the validator and the trace CLI (repro.launch.trace) both read
+partial files fine.
+
+``validate_events`` is the CI gate: schema version match, no NaN/Inf
+anywhere, monotonically increasing train steps, optionally zero post-warmup
+recompiles and bounded estimator drift (DESIGN.md §11).
+
+``write_bench_json`` standardises the BENCH_*.json artifacts: every
+benchmark payload is wrapped with schema version, benchmark + config name,
+UTC timestamp, and host/device info so the bench trajectory is comparable
+across PRs and machines.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import platform
+import time
+from typing import List, Optional
+
+#: JSONL event schema (bump on any breaking event-shape change)
+SCHEMA_VERSION = 1
+#: BENCH_*.json wrapper schema
+BENCH_SCHEMA_VERSION = 1
+
+
+def host_device_meta() -> dict:
+    """Host + device identity stamped into run_start events and bench files.
+    jax is imported lazily and guarded: the writer must work even in a
+    broken-backend environment (telemetry should never take the run down)."""
+    meta = {
+        "host": platform.node(),
+        "os": platform.system().lower(),
+        "python": platform.python_version(),
+    }
+    try:  # noqa: SIM105
+        import jax
+        meta["jax"] = jax.__version__
+        devs = jax.devices()
+        meta["device_platform"] = devs[0].platform
+        meta["device_count"] = len(devs)
+        meta["device_kind"] = getattr(devs[0], "device_kind", "")
+    except Exception:  # noqa: BLE001 — no backend is still a valid host
+        pass
+    return meta
+
+
+def _sanitize(obj):
+    """NaN/Inf are not JSON — encode them as strings so a diverged loss is
+    visible in the file (and caught by the validator) instead of producing
+    an unparseable line."""
+    if isinstance(obj, float):
+        if math.isnan(obj):
+            return "NaN"
+        if math.isinf(obj):
+            return "Inf" if obj > 0 else "-Inf"
+        return obj
+    if isinstance(obj, dict):
+        return {k: _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize(v) for v in obj]
+    return obj
+
+
+class JsonlSink:
+    """Append-only JSONL writer.  ``path=None`` keeps events in memory only
+    (tests, benchmarks that want the registry/event stream without a file);
+    with a path, ``keep`` additionally retains them in ``self.events`` so
+    in-process consumers don't have to re-read the file."""
+
+    def __init__(self, path: Optional[str] = None, keep: bool = True):
+        self.path = path
+        self.events: List[dict] = [] if keep else None
+        self._f = None
+        if path:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._f = open(path, "w")
+
+    def emit(self, kind: str, **fields) -> dict:
+        ev = {"v": SCHEMA_VERSION, "kind": kind, "ts": time.time()}
+        ev.update(fields)
+        ev = _sanitize(ev)
+        if self.events is not None:
+            self.events.append(ev)
+        if self._f is not None:
+            self._f.write(json.dumps(ev) + "\n")
+            self._f.flush()
+        return ev
+
+    def close(self):
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+def read_events(path: str) -> List[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def _find_nonfinite(obj, path=""):
+    if isinstance(obj, str) and obj in ("NaN", "Inf", "-Inf"):
+        return [path]
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return [path]
+    if isinstance(obj, dict):
+        return [p for k, v in obj.items()
+                for p in _find_nonfinite(v, f"{path}.{k}")]
+    if isinstance(obj, list):
+        return [p for i, v in enumerate(obj)
+                for p in _find_nonfinite(v, f"{path}[{i}]")]
+    return []
+
+
+def validate_events(events: List[dict], *,
+                    require_zero_recompiles: bool = False,
+                    max_drift: Optional[float] = None) -> List[str]:
+    """Returns a list of human-readable schema violations (empty = valid).
+
+    Base checks: non-empty, leading ``run_start`` with a matching schema
+    version, every event carries (v, kind, ts), no NaN/Inf anywhere, and
+    ``train_step.step`` strictly increasing.  ``require_zero_recompiles``
+    fails on any post-warmup ``recompile`` event or a nonzero
+    ``*.recompiles_post_warmup`` counter in the final snapshot.
+    ``max_drift`` bounds the estimator-drift gauge of the LAST train window
+    (measured/predicted peak memory) to [1/max_drift, max_drift].
+    """
+    errors: List[str] = []
+    if not events:
+        return ["empty event stream"]
+    head = events[0]
+    if head.get("kind") != "run_start":
+        errors.append(f"first event is {head.get('kind')!r}, not run_start")
+    if head.get("v") != SCHEMA_VERSION:
+        errors.append(f"schema version {head.get('v')} != {SCHEMA_VERSION}")
+
+    last_step = None
+    last_drift = None
+    recompiles = 0
+    for i, ev in enumerate(events):
+        for field in ("v", "kind", "ts"):
+            if field not in ev:
+                errors.append(f"event {i}: missing {field!r}")
+        bad = _find_nonfinite(ev)
+        if bad:
+            errors.append(f"event {i} ({ev.get('kind')}): non-finite value "
+                          f"at {', '.join(bad)}")
+        kind = ev.get("kind")
+        if kind == "train_step":
+            step = ev.get("step")
+            if last_step is not None and not (isinstance(step, int)
+                                              and step > last_step):
+                errors.append(f"event {i}: train_step step {step} not > "
+                              f"previous {last_step}")
+            last_step = step
+        elif kind == "train_window":
+            if ev.get("mem_drift_x") is not None:
+                last_drift = ev["mem_drift_x"]
+        elif kind == "recompile":
+            recompiles += 1
+        elif kind == "run_end":
+            counters = (ev.get("metrics") or {}).get("counters", {})
+            for name, value in counters.items():
+                if name.endswith("recompiles_post_warmup"):
+                    recompiles = max(recompiles, int(value))
+
+    if require_zero_recompiles and recompiles:
+        errors.append(f"{recompiles} post-warmup recompile(s)")
+    if max_drift is not None:
+        if last_drift is None:
+            errors.append("no train_window event carries mem_drift_x "
+                          "(drift gauge never emitted)")
+        elif not (1.0 / max_drift <= last_drift <= max_drift):
+            errors.append(f"estimator drift {last_drift:.3f}x outside "
+                          f"[{1 / max_drift:.3f}, {max_drift:.3f}]")
+    return errors
+
+
+def write_bench_json(path: str, name: str, payload: dict,
+                     config: Optional[str] = None, indent: int = 1) -> dict:
+    """Shared BENCH_*.json writer: wraps ``payload`` (the benchmark's own
+    result dict, unchanged, under ``"result"``) with provenance metadata.
+    Every benchmark writes through here so artifacts from different PRs/
+    machines are directly comparable."""
+    doc = {
+        "bench_schema": BENCH_SCHEMA_VERSION,
+        "bench": name,
+        "config": config,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "meta": host_device_meta(),
+        "result": _sanitize(payload),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=indent)
+    return doc

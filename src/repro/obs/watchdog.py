@@ -1,0 +1,84 @@
+"""Device-memory watchdog: measured high-water vs estimator-predicted peak.
+
+Measurement strategy, best first:
+
+  * ``device.memory_stats()["peak_bytes_in_use"]`` — the allocator's own
+    high-water mark (TPU/GPU).  This sees everything, including transients
+    inside jitted steps.
+  * ``jax.live_arrays()`` byte sum — the CPU fallback (the CPU backend
+    reports no allocator stats).  Sampled between steps it sees the resident
+    state (params, optimizer moments, caches, batches) but NOT in-step
+    transients, so it is a lower bound; the watchdog keeps its own
+    high-water across samples.
+
+The drift gauge is ``measured_peak / predicted_peak`` with the prediction
+coming from ``repro.memory.estimator`` (``MemoryEstimate.device_total`` of
+the active per-layer policy plan).  Drift ~1 means the static planner's
+budget math matches reality; the CI validator bounds it (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def measure_device_bytes() -> Optional[int]:
+    """Current measured device-memory footprint in bytes, or None if neither
+    allocator stats nor live-array accounting is available.  Never raises —
+    the watchdog must not take the run down."""
+    try:
+        import jax
+    except Exception:  # noqa: BLE001
+        return None
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats and "peak_bytes_in_use" in stats:
+            return int(stats["peak_bytes_in_use"])
+        if stats and "bytes_in_use" in stats:
+            return int(stats["bytes_in_use"])
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        return sum(a.size * a.dtype.itemsize for a in jax.live_arrays())
+    except Exception:  # noqa: BLE001
+        return None
+
+
+class MemoryWatchdog:
+    """Samples the measured footprint, tracks the high-water mark, and
+    reports drift against a static prediction.
+
+    ``predicted_bytes`` is optional: without it the watchdog still reports
+    the measured gauge (drift is simply absent, and the validator's
+    ``--max-drift`` check will flag that if CI requires it)."""
+
+    def __init__(self, telemetry=None, predicted_bytes: Optional[int] = None):
+        self.telemetry = telemetry
+        self.predicted_bytes = predicted_bytes
+        self.peak_bytes: Optional[int] = None
+
+    def sample(self) -> Optional[int]:
+        b = measure_device_bytes()
+        if b is not None:
+            self.peak_bytes = b if self.peak_bytes is None \
+                else max(self.peak_bytes, b)
+            if self.telemetry is not None:
+                self.telemetry.gauge("mem.measured_bytes").set(b)
+        return b
+
+    def drift(self) -> Optional[float]:
+        if self.peak_bytes is None or not self.predicted_bytes:
+            return None
+        return self.peak_bytes / self.predicted_bytes
+
+    def window_fields(self) -> dict:
+        """Per-log-window fields merged into ``train_window`` events: the
+        measured high-water gauge, the prediction, and their ratio."""
+        self.sample()
+        drift = self.drift()
+        if self.telemetry is not None and drift is not None:
+            self.telemetry.gauge("mem.drift_x").set(drift)
+        return {
+            "mem_measured_peak_bytes": self.peak_bytes,
+            "mem_predicted_bytes": self.predicted_bytes,
+            "mem_drift_x": drift,
+        }

@@ -40,6 +40,7 @@ admission and never burns decode steps.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -47,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serving import sampling
 
 
@@ -70,9 +72,17 @@ def _is_key(entry, name: str) -> bool:
 class ServingEngine:
     def __init__(self, model, params, *, slots: int = 4, buf_len: int = 256,
                  extras=None, drain_every: int = 4,
-                 pad_prefill: Optional[bool] = None):
+                 pad_prefill: Optional[bool] = None, telemetry=None):
         self.model = model
         self.params = params
+        self.tel = obs.as_telemetry(telemetry, role="serve",
+                                    config=model.cfg.name)
+        # host-side request timestamps for TTFT/TPOT (drain-granular: the
+        # host only observes tokens at drain boundaries, so TTFT is
+        # quantized by drain_every — the price of syncless decode)
+        self._submit_t: Dict[int, float] = {}
+        self._admit_t: Dict[int, float] = {}
+        self._first_tok_t: Dict[int, float] = {}
         self.slots = slots
         self.buf_len = buf_len
         self.drain_every = drain_every
@@ -150,15 +160,24 @@ class ServingEngine:
 
         self._step_fn = jax.jit(_steps)
         self._admit_fn = jax.jit(_prefill_admit)
+        self._recompile_wd = obs.RecompileWatchdog(
+            {"step": self._step_fn, "admit": self._admit_fn},
+            telemetry=self.tel, scope="serve")
 
     # ------------------------------------------------------------ submit
 
     def submit(self, req: Request):
         if req.prompt.size + req.max_new_tokens > self.buf_len:
+            self.tel.counter("serve.admission_rejects").inc()
+            self.tel.emit("admission_reject", uid=req.uid,
+                          need=int(req.prompt.size + req.max_new_tokens),
+                          buf_len=self.buf_len)
             raise ValueError(
                 f"request {req.uid} needs {req.prompt.size + req.max_new_tokens}"
                 f" cache slots > buffer {self.buf_len}")
         req.generated = []
+        self._submit_t[req.uid] = time.perf_counter()
+        self.tel.counter("serve.requests_submitted").inc()
         self.queue.append(req)
 
     # ------------------------------------------------------------ admission
@@ -213,37 +232,84 @@ class ServingEngine:
                 eos_ids[s] = req.eos_id
                 max_news[s] = req.max_new_tokens
                 self.active[s] = req
-            self.cache, self.sstate = self._admit_fn(
-                self.cache, self._fresh, self.sstate, jnp.asarray(tokens),
-                jnp.asarray(lengths), jnp.asarray(admit), jnp.asarray(seeds),
-                jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(top_ps),
-                jnp.asarray(eos_ids), jnp.asarray(max_news))
+            now = time.perf_counter()
+            for req in batch:
+                self._admit_t[req.uid] = now
+            with self.tel.span("serve.prefill_admit", bucket=int(lb),
+                               n=len(batch)):
+                self.cache, self.sstate = self._admit_fn(
+                    self.cache, self._fresh, self.sstate, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(admit),
+                    jnp.asarray(seeds), jnp.asarray(temps),
+                    jnp.asarray(top_ks), jnp.asarray(top_ps),
+                    jnp.asarray(eos_ids), jnp.asarray(max_news))
+            self.tel.counter("serve.requests_admitted").inc(len(batch))
 
     # ------------------------------------------------------------ stepping
 
     def _drain(self):
         """One host sync: pull token buffers + termination flags, append new
-        tokens to their requests, finalise finished slots."""
+        tokens to their requests, finalise finished slots.  This is where
+        the host first OBSERVES tokens, so per-request TTFT / TPOT are
+        stamped here (quantized by the drain cadence)."""
+        t_dr = time.perf_counter()
         out, gen, alive = jax.device_get(
             (self.sstate["out"], self.sstate["gen"], self.sstate["active"]))
+        now = time.perf_counter()
+        self.tel.histogram("serve.drain_s").observe(now - t_dr)
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             n = int(gen[s])
             have = len(req.generated)
             req.generated.extend(int(t) for t in out[s, have:n])
+            if n > 0 and have == 0:
+                self._first_tok_t[req.uid] = now
+                sub = self._submit_t.get(req.uid)
+                if sub is not None:
+                    self.tel.histogram("serve.ttft_s").observe(now - sub)
             if not bool(alive[s]):
                 self.done[req.uid] = req
                 self.active[s] = None
+                self._finalize(req, now)
+
+    def _finalize(self, req: Request, now: float):
+        """Emit the per-request record: TTFT (submit -> first observed
+        token), TPOT (mean inter-token time after the first), queue wait
+        (submit -> admitted) and totals."""
+        n = len(req.generated)
+        self.tel.counter("serve.requests_done").inc()
+        self.tel.counter("serve.tokens_generated").inc(n)
+        sub = self._submit_t.pop(req.uid, None)
+        adm = self._admit_t.pop(req.uid, None)
+        first = self._first_tok_t.pop(req.uid, None)
+        fields = {"uid": req.uid, "tokens": n}
+        if sub is not None:
+            fields["total_s"] = now - sub
+            if adm is not None:
+                fields["queue_s"] = adm - sub
+            if first is not None:
+                fields["ttft_s"] = first - sub
+                if n > 1:
+                    fields["tpot_s"] = (now - first) / (n - 1)
+                    self.tel.histogram("serve.tpot_s").observe(
+                        fields["tpot_s"])
+        self.tel.emit("serve_request", **fields)
 
     def step(self) -> int:
         """Admit + ``drain_every`` fused decode steps + one drain.
         Returns #active slots (host view, post-drain)."""
         self._admit()
-        if not any(r is not None for r in self.active):
+        self.tel.gauge("serve.queue_depth").set(len(self.queue))
+        n_active = sum(1 for r in self.active if r is not None)
+        self.tel.gauge("serve.active_slots").set(n_active)
+        self.tel.gauge("serve.slot_utilization").set(n_active / self.slots)
+        if n_active == 0:
             return 0
-        self.cache, self.sstate = self._step_fn(self.cache, self.sstate)
+        with self.tel.span("serve.decode_window", steps=self.drain_every):
+            self.cache, self.sstate = self._step_fn(self.cache, self.sstate)
         self._drain()
+        self._recompile_wd.check()
         return sum(1 for r in self.active if r is not None)
 
     def run(self, max_steps: int = 10_000):
@@ -257,6 +323,15 @@ class ServingEngine:
     def jit_cache_sizes(self) -> Dict[str, int]:
         """Compiled-signature counts of the engine's jitted entry points —
         the serving benchmark gates on these being frozen after warmup (the
-        admit function holds one entry per prefill bucket)."""
-        return {"step": self._step_fn._cache_size(),
-                "admit": self._admit_fn._cache_size()}
+        admit function holds one entry per prefill bucket).  Uses the
+        guarded ``obs.jit_cache_size`` probe (``-1`` sentinel when this JAX
+        version exposes none) so telemetry degrades instead of raising."""
+        return {"step": obs.jit_cache_size(self._step_fn),
+                "admit": obs.jit_cache_size(self._admit_fn)}
+
+    def mark_warm(self) -> Dict[str, int]:
+        """Freeze the expected compiled-signature set: every jit-cache
+        growth after this is counted in ``serve.recompiles_post_warmup``
+        and emitted as a ``recompile`` event.  Call after a warmup pass has
+        touched every prefill bucket the workload will use."""
+        return self._recompile_wd.mark_warm()

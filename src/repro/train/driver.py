@@ -18,6 +18,7 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import manager as ckpt
 from repro.core import schedule
 from repro.data.pipeline import DataConfig, packed_batches
@@ -34,14 +35,50 @@ class RunConfig:
     n_micro: int = 1
 
 
+def _predicted_peak_bytes(model, optimizer, batch: int, seq: int,
+                          save_memory) -> Optional[int]:
+    """Static peak-HBM prediction for the drift gauge (repro.memory
+    estimator, DESIGN.md §11).  Guarded: telemetry must never take the run
+    down, so any estimator failure just disables the prediction."""
+    try:
+        from repro.memory import estimator as est
+        opt_name = type(optimizer).__name__.lower()
+        if opt_name not in ("adamw", "lomo", "galore"):
+            opt_name = "adamw"
+        e = est.estimate(model.cfg, batch, seq, optimizer=opt_name)
+        if isinstance(save_memory, (list, tuple)):
+            policies = list(save_memory)
+        elif save_memory and model.cfg.reversible:
+            policies = ["reversible"] * e.n_units
+        else:
+            policies = ["store"] * e.n_units
+        return e.device_total(policies)
+    except Exception:  # noqa: BLE001
+        return None
+
+
 def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
           params=None, log_fn: Callable = print,
-          fail_at_step: Optional[int] = None, plan=None):
+          fail_at_step: Optional[int] = None, plan=None, telemetry=None):
     """Runs (or resumes) a two-stage fine-tune.  ``fail_at_step`` simulates a
     preemption (raises) for the fault-tolerance tests.  ``plan`` is an
     optional ``repro.memory.planner.MemoryPlan`` (or a raw per-layer policy
     list): the step then runs the planned mixed activation policies instead
-    of the all-reversible default."""
+    of the all-reversible default.  ``telemetry`` is a JSONL path or a
+    ``repro.obs.Telemetry``: the driver then emits per-step loss/grad-norm/
+    step-time events, per-window throughput + MFU + estimator-drift gauges,
+    and checkpoint/compile durations (DESIGN.md §11).
+
+    Timing accounting: jit compile time (the first call of each stage step)
+    and checkpoint save/restore time are measured and reported as their own
+    metrics — the steady-state step-time histogram and the logged steps/s
+    contain neither, so the first log window is no longer skewed by compile
+    and checkpoint windows are not skewed by save I/O."""
+    tel = obs.as_telemetry(telemetry, role="train", config=model.cfg.name,
+                           total_steps=run.total_steps,
+                           global_batch=data_cfg.global_batch,
+                           seq_len=data_cfg.seq_len, n_micro=run.n_micro)
+    owns_tel = telemetry is not None and not hasattr(telemetry, "emit")
     save_memory = True
     if plan is not None:
         save_memory = list(getattr(plan, "policies", plan))
@@ -55,8 +92,11 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
 
     latest = ckpt.latest_step(run.ckpt_dir)
     if latest is not None:
+        t_rs = time.perf_counter()
         (params, opt_state), start_step = ckpt.restore(
             run.ckpt_dir, (params, opt_state))
+        tel.emit("ckpt_restore", step=start_step,
+                 dur_s=time.perf_counter() - t_rs)
         log_fn(f"[driver] resumed from step {start_step}")
 
     step1 = make_train_step(model, optimizer, n_micro=run.n_micro,
@@ -65,28 +105,87 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
     step2 = make_train_step(model, optimizer, n_micro=run.n_micro,
                             mask_fn=schedule.stage2_mask,
                             save_memory=save_memory)
-    step1 = jax.jit(step1, donate_argnums=(0, 1))
-    step2 = jax.jit(step2, donate_argnums=(0, 1))
+    step1 = obs.instrument_jit(jax.jit(step1, donate_argnums=(0, 1)),
+                               "train_step_stage1", tel)
+    step2 = obs.instrument_jit(jax.jit(step2, donate_argnums=(0, 1)),
+                               "train_step_stage2", tel)
+
+    tokens_per_step = data_cfg.global_batch * data_cfg.seq_len
+    flops_per_step = peak = None
+    memw = None
+    if tel.enabled:
+        try:
+            from repro.memory import estimator as est
+            flops_per_step = est.train_step_flops(
+                model, data_cfg.global_batch, data_cfg.seq_len, save_memory)
+            peak = est.peak_flops()
+        except Exception:  # noqa: BLE001
+            pass
+        micro_b = max(data_cfg.global_batch // run.n_micro, 1)
+        memw = obs.MemoryWatchdog(tel, _predicted_peak_bytes(
+            model, optimizer, micro_b, data_cfg.seq_len, save_memory))
 
     it = packed_batches(data_cfg, start_step=start_step)
     losses = []
-    t0 = time.time()
+    window_s = 0.0          # steady-state step seconds in this log window
+    window_steps = 0        # steps contributing to window_s (compiles excl.)
+
+    def emit_window(step):
+        sps = window_steps / max(window_s, 1e-9)
+        stage = 1 if step < run.stage1_steps else 2
+        win = {"step": step + 1, "stage": stage,
+               "loss_mean": float(np.mean(losses[-run.log_every:])),
+               "steps_per_s": sps, "steady_steps": window_steps,
+               "tokens_per_s": sps * tokens_per_step}
+        if flops_per_step is not None:
+            win["achieved_flops_per_s"] = sps * flops_per_step
+            win["mfu"] = sps * flops_per_step / peak
+            tel.gauge("train.mfu").set(win["mfu"])
+        tel.gauge("train.tokens_per_s").set(win["tokens_per_s"])
+        if memw is not None:
+            win.update(memw.window_fields())
+        tel.emit("train_window", **win)
+        log_fn(f"[driver] step {step + 1} stage {stage} "
+               f"loss {win['loss_mean']:.4f} "
+               f"({sps:.2f} steps/s)")
+
     for step in range(start_step, run.total_steps):
         batch = next(it)
         fn = step1 if step < run.stage1_steps else step2
+        t_st = time.perf_counter()
         params, opt_state, metrics = fn(params, opt_state, batch)
-        losses.append(float(metrics["loss"]))
+        loss = float(metrics["loss"])           # host sync: step is done
+        dt = time.perf_counter() - t_st
+        losses.append(loss)
+        compiled = fn.last_call_compiled
+        if compiled:
+            tel.gauge("train.compile_s").set(dt)
+        else:
+            window_s += dt
+            window_steps += 1
+            tel.histogram("train.step_s").observe(dt)
+        tel.emit("train_step", step=step + 1,
+                 stage=1 if step < run.stage1_steps else 2, loss=loss,
+                 grad_norm=float(metrics["grad_norm"]), step_s=dt,
+                 compiled=compiled)
         if (step + 1) % run.log_every == 0:
-            sps = run.log_every / max(time.time() - t0, 1e-9)
-            stage = 1 if step < run.stage1_steps else 2
-            log_fn(f"[driver] step {step + 1} stage {stage} "
-                   f"loss {np.mean(losses[-run.log_every:]):.4f} "
-                   f"({sps:.2f} steps/s)")
-            t0 = time.time()
+            emit_window(step)
+            window_s, window_steps = 0.0, 0
         if (step + 1) % run.ckpt_every == 0:
+            t_sv = time.perf_counter()
             ckpt.save(run.ckpt_dir, step + 1, (params, opt_state))
+            save_s = time.perf_counter() - t_sv
+            tel.counter("train.ckpt_saves").inc()
+            tel.histogram("train.ckpt_save_s").observe(save_s)
+            tel.emit("ckpt_save", step=step + 1, dur_s=save_s)
         if fail_at_step is not None and step + 1 == fail_at_step:
             raise RuntimeError(f"simulated preemption at step {step + 1}")
+    if window_steps and tel.enabled:
+        # trailing partial window: short runs (total_steps not a multiple of
+        # log_every) still get throughput + memory-drift gauges
+        emit_window(run.total_steps - 1)
+    if owns_tel:
+        tel.close()
     return params, opt_state, losses
 
 
