@@ -89,10 +89,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
     ap.add_argument("--mb", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_calibrate.json",
+                    help="standard BENCH_*.json artifact (repro.obs."
+                         "write_bench_json; also appends to the bench "
+                         "trajectory)")
     args = ap.parse_args()
     r = run(args.arch, args.mb)
     for k, v in r.items():
         print(f"{k}: {v}")
+    from repro.obs import write_bench_json
+    write_bench_json(args.out, "calibrate", r, config=args.arch)
+    print(f"[calibrate] wrote {args.out}")
 
 
 if __name__ == "__main__":

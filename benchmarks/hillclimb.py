@@ -17,7 +17,6 @@ under the same assumptions.
     PYTHONPATH=src python -m benchmarks.hillclimb --out hillclimb_results.json
 """
 import argparse
-import json
 
 from repro.launch.mesh import make_production_mesh
 from repro.launch.dryrun import lower_cell
@@ -60,7 +59,10 @@ def measure(arch, shape, mesh, name, opts):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="hillclimb_results.json")
+    ap.add_argument("--out", default="BENCH_hillclimb.json",
+                    help="standard BENCH_*.json artifact (repro.obs."
+                         "write_bench_json; also appends to the bench "
+                         "trajectory)")
     ap.add_argument("--cell", default=None, help="arch:shape to run only one")
     ap.add_argument("--hsdp-multipod", action="store_true",
                     help="also run the mistral HSDP multi-pod variant")
@@ -92,8 +94,9 @@ def main():
             except Exception as e:  # noqa: BLE001
                 print(f"[mp {name}] FAIL {type(e).__name__}: {str(e)[:300]}")
 
-    with open(args.out, "w") as f:
-        json.dump(rows, f, indent=1)
+    from repro.obs import write_bench_json
+    write_bench_json(args.out, "hillclimb", {"rows": rows})
+    print(f"[hillclimb] wrote {args.out}")
 
 
 if __name__ == "__main__":

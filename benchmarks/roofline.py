@@ -21,7 +21,6 @@ Cost multipliers over forward FLOPs:
 from __future__ import annotations
 
 import argparse
-import json
 import math
 from typing import Optional
 
@@ -304,7 +303,10 @@ def roofline_row(arch: str, shape_name: str, overrides: Optional[dict] = None,
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the table as a standard BENCH_*.json "
+                         "(repro.obs.write_bench_json; also appends to the "
+                         "bench trajectory)")
     args = ap.parse_args(argv if argv is not None else None)
     rows = []
     for label, kw in (
@@ -330,8 +332,9 @@ def main(argv=None):
                       f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
                       f"{r['mfu_bound']:6.3f}")
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
+        from repro.obs import write_bench_json
+        write_bench_json(args.out, "roofline", {"rows": rows})
+        print(f"[roofline] wrote {args.out}")
 
 
 if __name__ == "__main__":

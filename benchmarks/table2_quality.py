@@ -82,9 +82,23 @@ def run():
 
 
 def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_table2_quality.json",
+                    help="standard BENCH_*.json artifact (repro.obs."
+                         "write_bench_json; also appends to the bench "
+                         "trajectory)")
+    args = ap.parse_args()
+    rows = run()
     print("method,eval_loss")
-    for name, loss in run():
+    for name, loss in rows:
         print(f"{name},{loss:.4f}")
+    from repro.obs import write_bench_json
+    write_bench_json(args.out, "table2_quality",
+                     {"rows": [{"method": n, "eval_loss": l}
+                               for n, l in rows]})
+    print(f"[table2] wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -310,6 +310,40 @@ def mixed_policy_stack(block_fwd: Callable, block_inv: Callable, policies,
     return apply
 
 
+# ------------------------------------------------------------ audit hooks
+#
+# The reversible audit mode (repro.obs.audit, DESIGN.md §12) re-walks a
+# stack layer by layer OUTSIDE the custom_vjp: forward collecting each
+# layer's true input streams, then inverting from the outputs exactly the
+# way ``bwd_rule`` does — including error ACCUMULATION across a contiguous
+# reversible segment (layer k's inversion is seeded with layer k+1's
+# reconstructed, not true, inputs; non-reversible policies reset to stored
+# values, mirroring the segment boundaries of ``mixed_policy_stack``).
+
+
+def layer_slice(stacked, j: int):
+    """Layer ``j``'s param tree out of a stacked (leading-dim n_layers)
+    tree — the per-layer view the audit walk feeds to block_fwd/block_inv."""
+    return jax.tree_util.tree_map(lambda a: a[j], stacked)
+
+
+def reconstruction_metrics(r1, r2, x1, x2):
+    """Per-layer inversion-quality scalars: (max_abs, mean_abs, rel) error
+    of the reconstructed streams (r1, r2) against the true inputs (x1, x2).
+    ``rel`` normalizes the max error by the true streams' max magnitude —
+    the quantity the ``validate --max-reconstruction-err`` CI gate bounds
+    (fixed-point cross-coupling inversion converges to ~dtype eps; see
+    DESIGN.md §3)."""
+    d1 = jnp.abs(r1.astype(jnp.float32) - x1.astype(jnp.float32))
+    d2 = jnp.abs(r2.astype(jnp.float32) - x2.astype(jnp.float32))
+    max_abs = jnp.maximum(jnp.max(d1), jnp.max(d2))
+    mean_abs = (jnp.sum(d1) + jnp.sum(d2)) / (d1.size + d2.size)
+    scale = jnp.maximum(jnp.max(jnp.abs(x1.astype(jnp.float32))),
+                        jnp.max(jnp.abs(x2.astype(jnp.float32))))
+    rel = max_abs / (scale + 1e-12)
+    return max_abs, mean_abs, rel
+
+
 def split_streams(h):
     """H (B,S,d) -> X1, X2 (B,S,d/2) along features (paper §3.1)."""
     d = h.shape[-1]

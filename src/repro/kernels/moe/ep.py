@@ -246,12 +246,14 @@ def ep_dispatch_stats(expert_idx, num_experts: int, ep: int,
     Tl = T // ep
     cap = Tl * k
     rows = off = 0
+    send_counts = np.zeros((ep, ep), np.int64)   # [src shard, dest shard]
     for s in range(ep):
         flat = jnp.asarray(idx[s * Tl:(s + 1) * Tl].reshape(-1),
                            dtype=jnp.int32)
         _slot, counts = _pack_plan(flat // El, ep, cap)
         counts = np.asarray(counts)
         assert int(counts.sum()) == cap, (int(counts.sum()), cap)
+        send_counts[s] = counts
         rows += int(counts.sum())
         off += int(counts.sum() - counts[s])
     rows_per_dev = rows // ep
@@ -264,4 +266,8 @@ def ep_dispatch_stats(expert_idx, num_experts: int, ep: int,
         "offdevice_fraction": off_frac,
         "wire_bytes_per_device": int(payload * off_frac),
         "buffer_bytes_per_device": 2 * ep * rows_per_dev * d_model * itemsize,
+        # per-(source, dest) ragged send counts: the routing-telemetry path
+        # (obs/audit) reports these so a skewed expert placement is visible
+        # as a hot destination column, not just a worse aggregate fraction
+        "send_counts": send_counts.tolist(),
     }

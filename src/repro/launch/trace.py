@@ -1,20 +1,35 @@
-"""Telemetry run-file CLI: summarize / validate / export (DESIGN.md §11).
+"""Telemetry run-file CLI: summarize / validate / export / trend / regress
+(DESIGN.md §11-§12).
 
     PYTHONPATH=src python -m repro.launch.trace summarize RUN.jsonl
     PYTHONPATH=src python -m repro.launch.trace validate RUN.jsonl \
-        [--require-zero-recompiles] [--max-drift 2.0]
+        [--require-zero-recompiles] [--max-drift 2.0] \
+        [--max-reconstruction-err 1e-3]
     PYTHONPATH=src python -m repro.launch.trace export RUN.jsonl \
         [--out trace.json]
+    PYTHONPATH=src python -m repro.launch.trace trend BENCH_TRAJECTORY.jsonl \
+        [--bench NAME] [--window 8]
+    PYTHONPATH=src python -m repro.launch.trace regress \
+        BENCH_TRAJECTORY.jsonl --max-regression-pct 20 [--min-points 3]
 
 ``summarize`` renders p50/p99 tables from the raw events (exact, not the
 bucket-resolution registry histograms): train step time / loss trajectory /
-throughput + MFU + memory drift, serving TTFT / TPOT / queue wait, span
-durations, compiles and checkpoint I/O.  ``validate`` applies the schema
-gates CI runs (see repro.obs.sink.validate_events).  ``export`` writes a
-chrome://tracing / Perfetto-compatible trace: spans become complete ("X")
-events on per-name tracks, gauges become counter ("C") tracks.
+throughput + MFU + memory drift, per-layer reversible-audit attribution and
+MoE routing telemetry, serving TTFT / TPOT / queue wait, span durations,
+compiles and checkpoint I/O.  ``validate`` applies the schema gates CI runs
+(see repro.obs.sink.validate_events); ``--max-reconstruction-err`` bounds
+the worst per-layer relative reconstruction error of the reversible audit.
+``export`` writes a chrome://tracing / Perfetto-compatible trace: spans
+become complete ("X") events on per-name tracks, gauges become counter
+("C") tracks.  ``trend``/``regress`` read the append-only bench trajectory
+(repro.obs.trajectory): trend prints each metric series' latest value vs
+its trailing median with a sparkline; regress exits nonzero when a metric
+moved more than the threshold in its bad direction — series shorter than
+``--min-points`` only report, so a fresh trajectory never blocks CI.
 
-No jax import: this must run on a machine that never saw the run.
+Run files are read in skip mode: a torn final line (killed run) degrades to
+the valid prefix.  No jax import: this must run on a machine that never saw
+the run.
 """
 from __future__ import annotations
 
@@ -49,6 +64,8 @@ def _fmt(v, unit="") -> str:
         return f"{v:.3f}x"
     if unit == "GiB":
         return f"{v / 2**30:.3f} GiB"
+    if unit == "MiB":
+        return f"{v / 2**20:.1f} MiB"
     if isinstance(v, float):
         return f"{v:.4g}"
     return str(v)
@@ -119,6 +136,69 @@ def summarize(events: List[dict]) -> None:
     if restores:
         rows.append(_lat_row("ckpt_restore", restores))
     _table("checkpoint", rows)
+
+    # ----- reversible audit (per-layer attribution, DESIGN.md §12)
+    audits = kinds.get("layer_audit", [])
+    if audits:
+        per: Dict[int, List[dict]] = {}
+        for e in audits:
+            per.setdefault(e.get("layer", -1), []).append(e)
+        rows = []
+        for layer in sorted(per):
+            evs = per[layer]
+            rels = [e["recon_rel"] for e in evs
+                    if isinstance(e.get("recon_rel"), (int, float))]
+            invs = [e["inv_s"] for e in evs if isinstance(e.get("inv_s"),
+                                                          (int, float))]
+            bwds = [e["bwd_s"] for e in evs if isinstance(e.get("bwd_s"),
+                                                          (int, float))]
+            res = next((e["residual_bytes"] for e in evs
+                        if e.get("residual_bytes") is not None), None)
+            rows.append((layer, evs[-1].get("policy", "?"), len(evs),
+                         _fmt(max(rels) if rels else None),
+                         _fmt(_pct(invs, 50), "ms"),
+                         _fmt(_pct(bwds, 50), "ms"), _fmt(res, "MiB")))
+        _table("layer audit (reversible backward attribution)", rows,
+               header=("layer", "policy", "audits", "recon_rel",
+                       "inv p50", "bwd p50", "residual"))
+    summaries = kinds.get("audit_summary", [])
+    if summaries:
+        last = summaries[-1]
+        rows = [(pol, agg.get("layers"), _fmt(agg.get("bwd_s"), "s"),
+                 _fmt(agg.get("inv_s"), "s"),
+                 _fmt(agg.get("residual_bytes"), "MiB"))
+                for pol, agg in sorted(
+                    (last.get("per_policy") or {}).items())]
+        _table(f"audit per-policy totals (step {last.get('step')})", rows,
+               header=("policy", "layers", "bwd", "inv", "residual"))
+        if last.get("recon_rel_max") is not None:
+            print(f"  worst reconstruction: rel {last['recon_rel_max']:.3e} "
+                  f"(mean {last.get('recon_rel_mean', 0):.3e}) over "
+                  f"{len(summaries)} audit(s)")
+
+    # ----- MoE routing telemetry
+    routes = kinds.get("moe_route", [])
+    if routes:
+        per = {}
+        for e in routes:
+            per.setdefault(e.get("layer", -1), []).append(e)
+        rows = []
+        for layer in sorted(per):
+            evs = per[layer]
+            imb = [e["imbalance"] for e in evs if "imbalance" in e]
+            ent = [e["entropy"] for e in evs if "entropy" in e]
+            drop = [e["dropped_fraction"] for e in evs
+                    if "dropped_fraction" in e]
+            drift = [e["ep_payload_drift_x"] for e in evs
+                     if e.get("ep_payload_drift_x") is not None]
+            rows.append((layer, len(evs),
+                         _fmt(max(imb) if imb else None, "x"),
+                         _fmt(min(ent) if ent else None),
+                         _fmt(max(drop) if drop else None),
+                         _fmt(drift[-1] if drift else None, "x")))
+        _table("moe routing (imbalance max / entropy min / drop max)", rows,
+               header=("layer", "samples", "imbalance", "entropy",
+                       "dropped", "ep drift"))
 
     # ----- serving
     reqs = kinds.get("serve_request", [])
@@ -207,6 +287,51 @@ def export_chrome_trace(events: List[dict], out_path: str) -> int:
     return len(trace)
 
 
+def trend(traj_path: str, bench: Optional[str], window: int) -> int:
+    from repro.obs import trajectory as traj
+    entries = traj.read_trajectory(traj_path)
+    if not entries:
+        print(f"[trace] {traj_path}: no trajectory entries")
+        return 0
+    rows = []
+    for r in traj.trend_rows(entries, bench=bench, window=window):
+        arrow = {"higher": "^good", "lower": "v good", None: ""}[r["direction"]]
+        rows.append((r["bench"], r["config"] or "-", r["metric"], r["n"],
+                     _fmt(r["latest"]), _fmt(r["median"]),
+                     "-" if r["delta_pct"] is None
+                     else f"{r['delta_pct']:+.1f}%", r["spark"], arrow))
+    _table(f"bench trajectory ({len(entries)} entries, "
+           f"latest vs trailing median of {window})", rows,
+           header=("bench", "config", "metric", "n", "latest", "median",
+                   "delta", "trend", "dir"))
+    return 0
+
+
+def regress(traj_path: str, max_regression_pct: float, min_points: int,
+            window: int, bench: Optional[str]) -> int:
+    from repro.obs import trajectory as traj
+    entries = traj.read_trajectory(traj_path)
+    gated = [r for r in traj.trend_rows(entries, bench=bench, window=window)
+             if r["direction"] is not None]
+    short = sum(1 for r in gated if r["n"] < min_points)
+    bad = traj.regressions(entries, max_regression_pct,
+                           min_points=min_points, window=window, bench=bench)
+    if bad:
+        print(f"[trace] {traj_path}: {len(bad)} regression(s) "
+              f"> {max_regression_pct:.0f}% vs trailing median")
+        for r in bad:
+            print(f"  - {r['bench']}/{r['config']}/{r['metric']}: "
+                  f"{_fmt(r['median'])} -> {_fmt(r['latest'])} "
+                  f"({r['regression_pct']:+.1f}% worse, n={r['n']}) "
+                  f"{r['spark']}")
+        return 1
+    note = (f" ({short} series still < {min_points} points, report-only)"
+            if short else "")
+    print(f"[trace] {traj_path}: no regressions > {max_regression_pct:.0f}% "
+          f"across {len(gated)} gated series{note}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.launch.trace")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -218,19 +343,43 @@ def main(argv=None) -> int:
             p.add_argument("--max-drift", type=float, default=None,
                            help="bound the last-window estimator drift to "
                                 "[1/x, x]")
+            p.add_argument("--max-reconstruction-err", type=float,
+                           default=None,
+                           help="bound the worst per-layer relative "
+                                "reconstruction error across layer_audit "
+                                "events (fails too when audit never ran)")
         if name == "export":
             p.add_argument("--out", default=None,
                            help="output trace path (default: RUN.trace.json)")
+    for name in ("trend", "regress"):
+        p = sub.add_parser(name)
+        p.add_argument("trajectory", help="BENCH_TRAJECTORY.jsonl file")
+        p.add_argument("--bench", default=None,
+                       help="restrict to one benchmark name")
+        p.add_argument("--window", type=int, default=8,
+                       help="trailing-median window (prior points)")
+        if name == "regress":
+            p.add_argument("--max-regression-pct", type=float, default=20.0)
+            p.add_argument("--min-points", type=int, default=3,
+                           help="series shorter than this only report "
+                                "(non-blocking until history accumulates)")
     args = ap.parse_args(argv)
 
-    events = read_events(args.run)
+    if args.cmd == "trend":
+        return trend(args.trajectory, args.bench, args.window)
+    if args.cmd == "regress":
+        return regress(args.trajectory, args.max_regression_pct,
+                       args.min_points, args.window, args.bench)
+
+    events = read_events(args.run, on_error="skip")
     if args.cmd == "summarize":
         summarize(events)
         return 0
     if args.cmd == "validate":
         errors = validate_events(
             events, require_zero_recompiles=args.require_zero_recompiles,
-            max_drift=args.max_drift)
+            max_drift=args.max_drift,
+            max_reconstruction_err=args.max_reconstruction_err)
         if errors:
             print(f"[trace] {args.run}: INVALID")
             for e in errors:

@@ -51,6 +51,14 @@ def main():
                     help="flash attention on the train path (Pallas fwd+bwd "
                          "kernels on TPU, tiled pure-JAX fallback here; "
                          "O(S) attention residuals, DESIGN.md §8)")
+    ap.add_argument("--audit-every", type=int, default=0, metavar="N",
+                    help="reversible audit mode (needs --telemetry): every N "
+                         "steps re-walk the stack layer by layer outside the "
+                         "train jit, emitting per-layer reconstruction error, "
+                         "per-policy backward time/residual-byte attribution "
+                         "(layer_audit events) and MoE routing telemetry "
+                         "(moe_route events); gate with `trace validate "
+                         "--max-reconstruction-err` (DESIGN.md §12)")
     ap.add_argument("--telemetry", default=None, metavar="PATH",
                     help="write a schema-versioned telemetry JSONL to PATH: "
                          "per-step loss/grad-norm/step-time, per-window "
@@ -105,7 +113,8 @@ def main():
                     host_id=jax.process_index())
     rc = RunConfig(total_steps=args.steps, stage1_steps=args.stage1,
                    ckpt_every=max(args.steps // 5, 1), ckpt_dir=args.ckpt_dir,
-                   log_every=args.log_every, n_micro=args.n_micro)
+                   log_every=args.log_every, n_micro=args.n_micro,
+                   audit_every=args.audit_every)
     memory_plan = None
     if args.plan or args.hbm_budget_gb is not None:
         from repro.memory.planner import plan as make_plan

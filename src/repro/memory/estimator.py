@@ -194,6 +194,16 @@ def estimate(cfg: ModelConfig, batch: int, seq: int,
         unit_host_bytes=unit_host)
 
 
+def residual_attribution(est: MemoryEstimate, policies: Sequence[str]):
+    """Per-unit backward-residual device bytes of a mixed plan, in layer
+    order — the byte attribution the layer auditor stamps into its
+    ``layer_audit`` events (DESIGN.md §12).  Just ``unit_act_bytes`` keyed
+    by each unit's policy; the depth-free residuals are a plan-level
+    property (``fixed_act_for``) and not attributed to any single layer."""
+    assert len(policies) == est.n_units, (len(policies), est.n_units)
+    return [est.unit_act_bytes[p] for p in policies]
+
+
 def moe_dispatch_cost(cfg: ModelConfig, batch: int, seq: int,
                       backend: Optional[str] = None,
                       block_m: int = 128) -> dict:

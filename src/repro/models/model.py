@@ -53,6 +53,9 @@ class StackDef:
     role: str = "main"                  # "main" | "encoder"
     std_fwd: Optional[Callable] = None  # standard residual path on full-width h
     half_inv: Optional[Callable] = None  # exact x2 = y2 - G(y1) (semi-reversible)
+    moe_tap: Optional[Callable] = None  # (lp, sh, ctx, i, x1, x2) ->
+    #   (router params, (T, d) routing input) — the audit layer re-runs the
+    #   router through this to compute per-expert stats (obs/audit, §12)
 
 
 # ===================================================================== helpers
@@ -226,9 +229,25 @@ def build_dense(cfg: ModelConfig, use_moe: bool = False):
     def half_inv(lp, sh, ctx, i, x1, y1, y2):
         return y2 - G(lp, sh, ctx, i, y1)
 
+    moe_tap = None
+    if use_moe:
+        def moe_tap(lp, sh, ctx, i, x1, x2):
+            # G's input is the post-F stream: replicate the coupling up to
+            # the router so audited routing sees exactly what training sees
+            y1 = x1 + F(lp, sh, ctx, i, x1, x2)
+            h = rms_norm(y1, lp["norm_mlp"], cfg.norm_eps)
+            if cfg.fold_adapters:
+                router = lp["mlp_ad"]["p_up"] @ lp["moe"]["router"]
+            else:
+                h = _up(lp["mlp_ad"], h)
+                router = lp["moe"]["router"]
+            B, S, d = h.shape
+            return {"router": router}, h.reshape(B * S, d)
+
     return [StackDef("layers", cfg.num_layers, _dense_sub_specs(cfg, use_moe),
                      fwd, inv, decode, cache_init,
-                     std_fwd=_std_block(cfg, use_moe), half_inv=half_inv)], {}
+                     std_fwd=_std_block(cfg, use_moe), half_inv=half_inv,
+                     moe_tap=moe_tap)], {}
 
 
 def build_moe(cfg: ModelConfig):
@@ -680,6 +699,39 @@ class Model:
             idxs = start + jnp.arange(end - start, dtype=jnp.int32)
             h, _ = jax.lax.scan(scan_body, h, (idxs, seg_params))
         return h
+
+    def audit_streams(self, params, tokens, extras=None):
+        """The prefix of ``hidden`` up to the first main stack, for the
+        layer auditor (repro.obs.audit): embedding split into the two
+        reversible streams, the position ctx, and the shared tree (with the
+        encoder already run for encdec — the audit walks main stacks only).
+        Requires a reversible config; the auditor then drives each stack's
+        fwd/inv per layer itself."""
+        cfg = self.cfg
+        assert cfg.reversible, "layer audit requires cfg.reversible=True"
+        B, S = tokens.shape
+        h = jnp.take(params["embed"], tokens, axis=0)
+        h = self._constrain(h)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        ctx = {"positions": positions}
+        shared = self._shared(params, extras)
+        if cfg.family == "encdec":
+            enc = extras["enc_feats"]
+            e1, e2 = split_streams(enc.astype(h.dtype))
+            ectx = {"positions": jnp.broadcast_to(
+                jnp.arange(enc.shape[1], dtype=jnp.int32)[None],
+                enc.shape[:2])}
+            enc_stack = next(s for s in self.stacks if s.role == "encoder")
+            apply_e = reversible_stack(enc_stack.fwd, enc_stack.inv,
+                                       enc_stack.n)
+            e1, e2 = apply_e(params["stacks"][enc_stack.name], shared, ectx,
+                             e1, e2)
+            shared = dict(shared)
+            shared["enc"] = rms_norm(merge_streams(e1, e2),
+                                     params["enc_norm"], cfg.norm_eps)
+        x1, x2 = split_streams(h)
+        return x1, x2, ctx, shared
 
     def hidden(self, params, tokens, extras=None, save_memory=True):
         """Final-normed hidden states (B,S,d) — everything before the LM head.

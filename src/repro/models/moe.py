@@ -151,6 +151,64 @@ def _einsum_dispatch(p, cfg: ModelConfig, xf, probs, gate_vals, expert_idx,
     return y, aux.astype(jnp.float32)
 
 
+def einsum_dropped_fraction(cfg: ModelConfig, expert_idx,
+                            group: Optional[int] = None):
+    """Fraction of (token, k) assignments the einsum backend's capacity
+    path drops, replaying ``_einsum_dispatch``'s exact priority order
+    (k-major within token order, per group, pads masked).  The dropless
+    backends (grouped / ep) drop nothing by construction."""
+    T, k = expert_idx.shape
+    E = padded_experts(cfg.num_experts)
+    g_size = min(group or GROUP, T)
+    pad = (-T) % g_size
+    G = (T + pad) // g_size
+    idx_g = _pad_rows(expert_idx, pad).reshape(G, g_size, k)
+    valid = _pad_rows(jnp.ones((T,), jnp.float32), pad).reshape(G, g_size)
+    onehot = jax.nn.one_hot(idx_g, E, dtype=jnp.float32) * valid[..., None, None]
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * g_size, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    C = _capacity(g_size, E, k, cfg.capacity_factor)
+    kept = jnp.sum((pos < C) * flat)
+    total = jnp.sum(flat)
+    return (1.0 - kept / jnp.maximum(total, 1.0)).astype(jnp.float32)
+
+
+def routing_stats(cfg: ModelConfig, probs, expert_idx, *,
+                  backend: Optional[str] = None,
+                  group: Optional[int] = None) -> dict:
+    """Per-layer routing telemetry from one routed batch (DESIGN.md §12).
+
+    probs: (T, E) f32 router softmax, expert_idx: (T, k) — the ``_route``
+    outputs.  Returns device scalars/arrays (no host sync here; callers
+    pull values at audit/log windows):
+
+      expert_load       (num_experts,) token-assignment counts per expert
+      imbalance         max expert load / mean expert load (1.0 = uniform)
+      entropy           mean per-token routing entropy in nats (0 = a
+                        collapsed router that puts all mass on one expert)
+      dropped_fraction  capacity-path drops ("einsum" backend; 0 for the
+                        dropless grouped/ep paths)
+
+    ``backend`` defaults to the config's active dispatch path (ep when
+    expert_parallel > 0).
+    """
+    Er = cfg.num_experts
+    E = padded_experts(Er)
+    if backend is None:
+        backend = "ep" if cfg.expert_parallel > 0 else cfg.moe_backend
+    load = jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
+                   axis=tuple(range(expert_idx.ndim)))[:Er]
+    imbalance = jnp.max(load) * Er / jnp.maximum(jnp.sum(load), 1.0)
+    p = probs[..., :Er]
+    entropy = jnp.mean(-jnp.sum(p * jnp.log(p + 1e-9), axis=-1))
+    if backend == "einsum":
+        dropped = einsum_dropped_fraction(cfg, expert_idx, group)
+    else:
+        dropped = jnp.float32(0.0)
+    return {"expert_load": load, "imbalance": imbalance,
+            "entropy": entropy, "dropped_fraction": dropped}
+
+
 def _switch_aux(cfg: ModelConfig, probs, expert_idx):
     """Global (ungrouped) Switch load-balancing statistic, shared by the
     grouped and expert-parallel dispatch paths."""

@@ -32,6 +32,10 @@ from repro.obs.registry import (Counter, Gauge, Histogram,  # noqa: F401
 from repro.obs.sink import (BENCH_SCHEMA_VERSION, SCHEMA_VERSION,  # noqa: F401
                             JsonlSink, host_device_meta, read_events,
                             validate_events, write_bench_json)
+from repro.obs.trajectory import (TRAJECTORY_SCHEMA_VERSION,  # noqa: F401
+                                  append_bench, flatten_metrics,
+                                  metric_direction, read_trajectory,
+                                  regressions, trajectory_path, trend_rows)
 from repro.obs.watchdog import MemoryWatchdog  # noqa: F401
 
 

@@ -1,0 +1,280 @@
+"""Reversible audit mode: per-layer attribution of the backward pass.
+
+``LayerAuditor`` re-walks the model's main stacks layer by layer OUTSIDE
+the training step's jit (zero impact on the hot path when audit is off):
+
+  forward   — collect every layer's true input streams (x1, x2);
+  backward  — walk layers in reverse exactly the way the reversible
+              custom_vjp does: a ``reversible`` layer inverts from the
+              CURRENT (possibly already-reconstructed) streams, so
+              reconstruction error ACCUMULATES across a contiguous
+              reversible segment; any other policy (store / remat /
+              offload) resets the walk to the stored inputs, mirroring
+              the segment boundaries of ``mixed_policy_stack``.
+
+Per layer it emits a ``layer_audit`` event with reconstruction error
+(max/mean abs + rel vs the true inputs), inversion and backward-probe
+wall time, and the planner's per-policy residual-byte attribution
+(repro.memory.estimator).  MoE layers additionally emit a ``moe_route``
+event with per-expert load, imbalance, routing entropy, capacity-drop
+fraction, and — under expert parallelism — the measured all-to-all
+payload vs ``estimator.ep_a2a_cost`` as a drift gauge.  DESIGN.md §12
+documents the event taxonomy and the ``validate --max-reconstruction-err``
+CI gate these feed.
+
+Cost model: the audit keeps O(n_layers) stream copies on device (it is a
+diagnostic, not a training mode) — the driver audits the FIRST microbatch
+only, and only every ``--audit-every`` steps.  All per-stack functions are
+jitted once with the layer index as a traced scalar, so an audit never
+recompiles per layer and never touches the train step's jit caches.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reversible import layer_slice, reconstruction_metrics
+
+
+def _block(x):
+    jax.block_until_ready(x)
+    return x
+
+
+class LayerAuditor:
+    """``policies``: one activation policy per main-stack unit, in layer
+    order (the planner's assignment; all-"reversible" for the paper
+    default).  ``telemetry``: a live (enabled) ``repro.obs.Telemetry``."""
+
+    def __init__(self, model, telemetry, policies: Sequence[str]):
+        self.model = model
+        self.tel = telemetry
+        self.policies: List[str] = list(policies)
+        n_main = sum(s.n for s in model.stacks if s.role == "main")
+        assert len(self.policies) == n_main, (len(self.policies), n_main)
+        self._entry = jax.jit(lambda p, t, e: model.audit_streams(p, t, e))
+        self._fns = {}          # stack name -> dict of jitted per-layer fns
+        self._warm = set()      # stack names whose fns have compiled
+        self._residuals = None  # per-unit residual bytes (lazy, guarded)
+        self._residuals_done = False
+
+    # ------------------------------------------------------ per-stack fns
+
+    def _stack_fns(self, s):
+        fns = self._fns.get(s.name)
+        if fns is not None:
+            return fns
+        cfg = self.model.cfg
+
+        def fwd(stacked, sh, ctx, j, x1, x2):
+            return s.fwd(layer_slice(stacked, j), sh, ctx, j, x1, x2)
+
+        def inv(stacked, sh, ctx, j, y1, y2):
+            return s.inv(layer_slice(stacked, j), sh, ctx, j, y1, y2)
+
+        def recon(r1, r2, x1, x2):
+            return reconstruction_metrics(r1, r2, x1, x2)
+
+        def bwd_probe(stacked, sh, ctx, j, x1, x2):
+            # one layer's real backward work: vjp w.r.t. params + both
+            # streams, reduced to a scalar so nothing is dead-code
+            # eliminated and the caller can fence on device completion
+            lp = layer_slice(stacked, j)
+            (y1, y2), vjp = jax.vjp(
+                lambda lp_, a, b: s.fwd(lp_, sh, ctx, j, a, b), lp, x1, x2)
+            dlp, d1, d2 = vjp((jnp.ones_like(y1), jnp.ones_like(y2)))
+            tot = jnp.sum(jnp.abs(d1)) + jnp.sum(jnp.abs(d2))
+            for leaf in jax.tree_util.tree_leaves(dlp):
+                if jnp.issubdtype(jnp.result_type(leaf), jnp.inexact):
+                    tot = tot + jnp.sum(jnp.abs(leaf))
+            return tot
+
+        fns = {"fwd": jax.jit(fwd), "inv": jax.jit(inv),
+               "recon": jax.jit(recon), "bwd": jax.jit(bwd_probe)}
+
+        if s.moe_tap is not None:
+            from repro.models import moe as moe_lib
+
+            def moe_stats(stacked, sh, ctx, j, x1, x2):
+                lp = layer_slice(stacked, j)
+                rp, xf = s.moe_tap(lp, sh, ctx, j, x1, x2)
+                probs, _gates, expert_idx = moe_lib._route(rp, cfg, xf)
+                st = moe_lib.routing_stats(cfg, probs, expert_idx)
+                return st, expert_idx
+            fns["moe"] = jax.jit(moe_stats)
+
+        self._fns[s.name] = fns
+        return fns
+
+    # ------------------------------------------------------ residual bytes
+
+    def _residual_bytes(self, batch_size: int, seq: int) -> Optional[list]:
+        """Per-unit backward-residual bytes under the active plan; guarded
+        — attribution must never take the audit (let alone the run) down."""
+        if self._residuals_done:
+            return self._residuals
+        self._residuals_done = True
+        try:
+            from repro.memory import estimator as est
+            e = est.estimate(self.model.cfg, batch_size, seq)
+            self._residuals = est.residual_attribution(e, self.policies)
+        except Exception:  # noqa: BLE001
+            self._residuals = None
+        return self._residuals
+
+    def _ep_drift(self, expert_idx, batch_size: int, seq: int):
+        cfg = self.model.cfg
+        if cfg.expert_parallel <= 0:
+            return None
+        try:
+            from repro.kernels.moe.ep import ep_dispatch_stats
+            from repro.memory import estimator as est
+            from repro.models.moe import padded_experts
+            itemsize = jnp.dtype(cfg.dtype).itemsize
+            meas = ep_dispatch_stats(np.asarray(expert_idx),
+                                     padded_experts(cfg.num_experts),
+                                     cfg.expert_parallel, cfg.d_model,
+                                     itemsize)
+            pred = est.ep_a2a_cost(cfg, batch_size, seq)
+            drift = (meas["payload_bytes_per_device"]
+                     / max(pred["a2a_payload_bytes"], 1))
+            return {"ep_payload_bytes_per_device":
+                        meas["payload_bytes_per_device"],
+                    "ep_predicted_payload_bytes":
+                        pred["a2a_payload_bytes"],
+                    "ep_payload_drift_x": drift,
+                    "ep_offdevice_fraction": meas["offdevice_fraction"]}
+        except Exception:  # noqa: BLE001
+            return None
+
+    # --------------------------------------------------------------- run
+
+    def run(self, params, batch, step: int) -> dict:
+        """One audit pass over the first microbatch of ``batch``.  Returns
+        the summary dict it also emits (tests read it directly)."""
+        tel = self.tel
+        tokens = batch["tokens"]
+        extras = {k: v for k, v in batch.items() if k in ("enc_feats", "img")}
+        x1, x2, ctx, shared = self._entry(params, tokens, extras or None)
+        B, S = tokens.shape
+        residuals = self._residual_bytes(B, S)
+
+        per_policy = {}
+        recon_rels = []
+        offset = 0
+        t_audit = time.perf_counter()
+        for s in self.model.stacks:
+            if s.role != "main":
+                continue
+            fns = self._stack_fns(s)
+            stacked = params["stacks"][s.name]
+            pols = self.policies[offset:offset + s.n]
+
+            if s.name not in self._warm:
+                # compile every fn once outside the timed walk (the layer
+                # index is traced, so this is the only compile this stack
+                # ever pays)
+                j0 = jnp.int32(0)
+                w1, w2 = fns["fwd"](stacked, shared, ctx, j0, x1, x2)
+                if s.inv is not None:
+                    r1, r2 = fns["inv"](stacked, shared, ctx, j0, w1, w2)
+                    _block(fns["recon"](r1, r2, x1, x2))
+                _block(fns["bwd"](stacked, shared, ctx, j0, x1, x2))
+                if "moe" in fns:
+                    _block(fns["moe"](stacked, shared, ctx, j0, x1, x2))
+                self._warm.add(s.name)
+
+            # ---- forward: collect true per-layer inputs
+            inputs = []
+            c1, c2 = x1, x2
+            for j in range(s.n):
+                inputs.append((c1, c2))
+                c1, c2 = fns["fwd"](stacked, shared, ctx, jnp.int32(j),
+                                    c1, c2)
+            jax.block_until_ready((c1, c2))
+
+            # ---- backward walk (mirrors bwd_rule / mixed_policy_stack)
+            y1, y2 = c1, c2
+            for j in reversed(range(s.n)):
+                pol = pols[j]
+                tx1, tx2 = inputs[j]
+                jj = jnp.int32(j)
+                ev = {"step": step, "stack": s.name, "layer": offset + j,
+                      "policy": pol}
+                if pol == "reversible" and s.inv is not None:
+                    t0 = time.perf_counter()
+                    r1, r2 = fns["inv"](stacked, shared, ctx, jj, y1, y2)
+                    jax.block_until_ready((r1, r2))
+                    ev["inv_s"] = time.perf_counter() - t0
+                    ma, me, rel = fns["recon"](r1, r2, tx1, tx2)
+                    ev["recon_max_abs"] = float(ma)
+                    ev["recon_mean_abs"] = float(me)
+                    ev["recon_rel"] = float(rel)
+                    recon_rels.append(ev["recon_rel"])
+                    y1, y2 = r1, r2         # error accumulates in-segment
+                else:
+                    y1, y2 = tx1, tx2       # stored inputs reset the walk
+                t0 = time.perf_counter()
+                _block(fns["bwd"](stacked, shared, ctx, jj, y1, y2))
+                ev["bwd_s"] = time.perf_counter() - t0
+                if residuals is not None and offset + j < len(residuals):
+                    ev["residual_bytes"] = residuals[offset + j]
+                agg = per_policy.setdefault(
+                    pol, {"layers": 0, "bwd_s": 0.0, "inv_s": 0.0,
+                          "residual_bytes": 0})
+                agg["layers"] += 1
+                agg["bwd_s"] += ev["bwd_s"]
+                agg["inv_s"] += ev.get("inv_s", 0.0)
+                agg["residual_bytes"] += ev.get("residual_bytes", 0)
+                tel.emit("layer_audit", **ev)
+
+                if "moe" in fns:
+                    st, expert_idx = fns["moe"](stacked, shared, ctx, jj,
+                                                tx1, tx2)
+                    mev = {"step": step, "stack": s.name,
+                           "layer": offset + j,
+                           "imbalance": float(st["imbalance"]),
+                           "entropy": float(st["entropy"]),
+                           "dropped_fraction": float(st["dropped_fraction"]),
+                           "expert_load":
+                               np.asarray(st["expert_load"]).astype(int)
+                               .tolist()}
+                    drift = self._ep_drift(expert_idx, B, S)
+                    if drift is not None:
+                        mev.update(drift)
+                        tel.gauge("moe.ep_payload_drift_x").set(
+                            drift["ep_payload_drift_x"])
+                    tel.gauge("moe.imbalance").set(mev["imbalance"])
+                    tel.gauge("moe.entropy").set(mev["entropy"])
+                    tel.gauge("moe.dropped_fraction").set(
+                        mev["dropped_fraction"])
+                    tel.emit("moe_route", **mev)
+            offset += s.n
+
+        summary = {"step": step, "n_layers": offset,
+                   "audit_s": time.perf_counter() - t_audit,
+                   "per_policy": per_policy}
+        if recon_rels:
+            summary["recon_rel_max"] = max(recon_rels)
+            summary["recon_rel_mean"] = sum(recon_rels) / len(recon_rels)
+            tel.gauge("audit.recon_rel_max").set(summary["recon_rel_max"])
+        tel.counter("audit.runs").inc()
+        tel.emit("audit_summary", **summary)
+        return summary
+
+
+def policies_for(model, save_memory) -> Optional[List[str]]:
+    """The per-layer policy list the auditor should attribute against, from
+    the driver's ``save_memory`` argument.  None = nothing auditable (the
+    non-reversible baseline or the "half" mode, whose backward stores
+    stream 1 and never accumulates reconstruction error)."""
+    if isinstance(save_memory, (list, tuple)):
+        return list(save_memory)
+    if save_memory is True and model.cfg.reversible:
+        n_main = sum(s.n for s in model.stacks if s.role == "main")
+        return ["reversible"] * n_main
+    return None

@@ -102,13 +102,25 @@ class JsonlSink:
             self._f = None
 
 
-def read_events(path: str) -> List[dict]:
+def read_events(path: str, on_error: str = "raise") -> List[dict]:
+    """``on_error="skip"`` drops undecodable lines instead of raising: the
+    per-line flush means a killed run leaves a valid prefix, but a kill
+    mid-write can still tear the FINAL line — the trace CLI reads in skip
+    mode so summarize/validate degrade to the valid prefix (partial tables)
+    rather than erroring on the torn tail."""
     out = []
     with open(path) as f:
-        for line in f:
+        for ln, line in enumerate(f, 1):
             line = line.strip()
-            if line:
+            if not line:
+                continue
+            try:
                 out.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                if on_error == "skip":
+                    continue
+                raise ValueError(
+                    f"{path}:{ln}: undecodable event line ({e})") from e
     return out
 
 
@@ -128,7 +140,9 @@ def _find_nonfinite(obj, path=""):
 
 def validate_events(events: List[dict], *,
                     require_zero_recompiles: bool = False,
-                    max_drift: Optional[float] = None) -> List[str]:
+                    max_drift: Optional[float] = None,
+                    max_reconstruction_err: Optional[float] = None
+                    ) -> List[str]:
     """Returns a list of human-readable schema violations (empty = valid).
 
     Base checks: non-empty, leading ``run_start`` with a matching schema
@@ -138,6 +152,9 @@ def validate_events(events: List[dict], *,
     ``*.recompiles_post_warmup`` counter in the final snapshot.
     ``max_drift`` bounds the estimator-drift gauge of the LAST train window
     (measured/predicted peak memory) to [1/max_drift, max_drift].
+    ``max_reconstruction_err`` bounds the worst per-layer relative
+    reconstruction error across all ``layer_audit`` events (the reversible
+    audit gate, DESIGN.md §12) — and fails if audit mode never emitted one.
     """
     errors: List[str] = []
     if not events:
@@ -150,6 +167,7 @@ def validate_events(events: List[dict], *,
 
     last_step = None
     last_drift = None
+    worst_recon = None
     recompiles = 0
     for i, ev in enumerate(events):
         for field in ("v", "kind", "ts"):
@@ -170,6 +188,11 @@ def validate_events(events: List[dict], *,
         elif kind == "train_window":
             if ev.get("mem_drift_x") is not None:
                 last_drift = ev["mem_drift_x"]
+        elif kind == "layer_audit":
+            rel = ev.get("recon_rel")
+            if isinstance(rel, (int, float)):
+                worst_recon = rel if worst_recon is None \
+                    else max(worst_recon, rel)
         elif kind == "recompile":
             recompiles += 1
         elif kind == "run_end":
@@ -187,15 +210,31 @@ def validate_events(events: List[dict], *,
         elif not (1.0 / max_drift <= last_drift <= max_drift):
             errors.append(f"estimator drift {last_drift:.3f}x outside "
                           f"[{1 / max_drift:.3f}, {max_drift:.3f}]")
+    if max_reconstruction_err is not None:
+        if worst_recon is None:
+            errors.append("no layer_audit event carries recon_rel "
+                          "(reversible audit mode never ran)")
+        elif worst_recon > max_reconstruction_err:
+            errors.append(f"worst per-layer reconstruction error "
+                          f"{worst_recon:.3e} exceeds "
+                          f"{max_reconstruction_err:.1e}")
     return errors
 
 
 def write_bench_json(path: str, name: str, payload: dict,
-                     config: Optional[str] = None, indent: int = 1) -> dict:
+                     config: Optional[str] = None, indent: int = 1,
+                     trajectory=None) -> dict:
     """Shared BENCH_*.json writer: wraps ``payload`` (the benchmark's own
     result dict, unchanged, under ``"result"``) with provenance metadata.
     Every benchmark writes through here so artifacts from different PRs/
-    machines are directly comparable."""
+    machines are directly comparable.
+
+    Each write also appends one slim line to the bench trajectory
+    (repro.obs.trajectory): ``trajectory`` is an explicit path, ``False``
+    disables the append, and the default resolves via the
+    ``REPRO_BENCH_TRAJECTORY`` env var or a ``BENCH_TRAJECTORY.jsonl``
+    sibling of ``path``.  The append is guarded — history bookkeeping must
+    never fail the benchmark that produced the result."""
     doc = {
         "bench_schema": BENCH_SCHEMA_VERSION,
         "bench": name,
@@ -206,4 +245,10 @@ def write_bench_json(path: str, name: str, payload: dict,
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=indent)
+    if trajectory is not False:
+        try:
+            from repro.obs import trajectory as traj
+            traj.append_bench(doc, traj.trajectory_path(path, trajectory))
+        except Exception:  # noqa: BLE001
+            pass
     return doc

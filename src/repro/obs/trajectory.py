@@ -1,0 +1,201 @@
+"""Bench trajectory: the append-only perf history behind trend/regress gates.
+
+Every ``obs.write_bench_json`` call also appends one slim JSONL line to a
+per-host trajectory file (``BENCH_TRAJECTORY.jsonl``), so benchmark results
+accumulate across PRs and CI runs instead of each BENCH_*.json overwriting
+the last.  An entry is the bench identity (name, config, host, platform,
+timestamp) plus the flattened numeric metrics of the result payload —
+nested dicts become dotted keys, list items are keyed by their ``name``/
+``method``/``policy``-style identifier (stable across runs of the same
+sweep) or by index.
+
+``trend_rows`` compares each (host, bench, config, metric) series' latest
+value against the trailing median; ``regressions`` turns that into a gate:
+a metric whose *bad* direction (inferred from the name — step seconds and
+latencies regress up, throughput and MFU regress down) moved more than X%
+vs the trailing median fails.  Series shorter than ``min_points`` never
+fail — a fresh trajectory is a report, not a gate, until history exists.
+
+The resolution order for the trajectory path: an explicit argument, the
+``REPRO_BENCH_TRAJECTORY`` env var (what CI sets to the cache-restored
+file), else ``BENCH_TRAJECTORY.jsonl`` next to the BENCH_*.json being
+written.  No jax import anywhere: ``trace.py trend/regress`` must run on a
+machine that never saw the runs (DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+#: trajectory line schema (bump on breaking entry-shape changes)
+TRAJECTORY_SCHEMA_VERSION = 1
+
+TRAJECTORY_ENV = "REPRO_BENCH_TRAJECTORY"
+TRAJECTORY_BASENAME = "BENCH_TRAJECTORY.jsonl"
+
+#: list items carrying one of these string fields are keyed by it instead of
+#: their index, so per-row metrics stay comparable across runs of a sweep
+_ID_KEYS = ("name", "method", "policy", "arch", "backend", "mode", "label")
+
+#: substring rules for the regression direction of a metric.  Higher-better
+#: patterns are checked first ("steps_per_s" must not match the "_s" rule).
+_HIGHER_BETTER = ("per_s", "tok_s", "throughput", "mfu", "flops",
+                  "speedup", "hit_rate", "accept")
+_LOWER_BETTER = ("_s", "_ms", "_us", "time", "latency", "ttft", "tpot",
+                 "p50", "p90", "p99", "bytes", "_gb", "_gib", "loss", "err",
+                 "drop", "drift", "overhead", "recompile", "compile")
+
+
+def metric_direction(name: str) -> Optional[str]:
+    """"higher" / "lower" = which way is GOOD; None = no regression gate
+    (counts, ids, and anything the substring rules cannot classify)."""
+    n = name.lower()
+    if any(t in n for t in _HIGHER_BETTER):
+        return "higher"
+    if any(t in n for t in _LOWER_BETTER):
+        return "lower"
+    return None
+
+
+def flatten_metrics(obj, prefix: str = "", out: Optional[dict] = None) -> Dict[str, float]:
+    """Numeric leaves of a bench result as a flat {dotted.key: float} dict.
+    Bools, strings (incl. the "NaN"/"Inf" markers) and empty containers are
+    dropped — the trajectory tracks magnitudes, not metadata."""
+    if out is None:
+        out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            flatten_metrics(v, f"{prefix}{k}.", out)
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            key = i
+            if isinstance(v, dict):
+                for ik in _ID_KEYS:
+                    if isinstance(v.get(ik), str):
+                        key = v[ik]
+                        break
+            flatten_metrics(v, f"{prefix}{key}.", out)
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def trajectory_path(bench_path: Optional[str] = None,
+                    explicit: Optional[str] = None) -> str:
+    if explicit:
+        return explicit
+    env = os.environ.get(TRAJECTORY_ENV)
+    if env:
+        return env
+    d = os.path.dirname(bench_path) if bench_path else ""
+    return os.path.join(d or ".", TRAJECTORY_BASENAME)
+
+
+def append_bench(doc: dict, path: str) -> dict:
+    """Append one write_bench_json document to the trajectory file.  The
+    entry keeps only what trend/regress need; the full payload stays in the
+    BENCH_*.json artifact."""
+    meta = doc.get("meta") or {}
+    entry = {
+        "v": TRAJECTORY_SCHEMA_VERSION,
+        "bench": doc.get("bench"),
+        "config": doc.get("config"),
+        "ts": doc.get("timestamp"),
+        "host": meta.get("host"),
+        "platform": meta.get("device_platform"),
+        "metrics": flatten_metrics(doc.get("result") or {}),
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
+
+
+def read_trajectory(path: str) -> List[dict]:
+    """File order = time order.  Tolerant of a torn final line (a killed
+    appender) — same degradation contract as the run-file reader."""
+    from repro.obs.sink import read_events
+    if not os.path.exists(path):
+        return []
+    return [e for e in read_events(path, on_error="skip")
+            if isinstance(e.get("metrics"), dict)]
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else (s[n // 2 - 1] + s[n // 2]) / 2.0
+
+
+_BARS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(vals: List[float]) -> str:
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    if hi <= lo:
+        return _BARS[0] * len(vals)
+    return "".join(_BARS[int((v - lo) / (hi - lo) * (len(_BARS) - 1))]
+                   for v in vals)
+
+
+def series(entries: List[dict], bench: Optional[str] = None
+           ) -> Dict[Tuple, List[float]]:
+    """(host, bench, config, metric) -> values in trajectory order.  Keyed
+    per host so a laptop's numbers never gate a CI runner's."""
+    out: Dict[Tuple, List[float]] = {}
+    for e in entries:
+        if bench and e.get("bench") != bench:
+            continue
+        base = (e.get("host"), e.get("bench"), e.get("config"))
+        for m, v in e["metrics"].items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out.setdefault(base + (m,), []).append(float(v))
+    return out
+
+
+def trend_rows(entries: List[dict], bench: Optional[str] = None,
+               window: int = 8) -> List[dict]:
+    """Latest value vs trailing median (up to ``window`` prior points) per
+    series, with a sparkline over the tail — the ``trace.py trend`` table."""
+    rows = []
+    for key, vals in sorted(series(entries, bench).items(),
+                            key=lambda kv: tuple(map(str, kv[0]))):
+        host, b, cfg, metric = key
+        latest = vals[-1]
+        prior = vals[max(0, len(vals) - 1 - window):-1]
+        med = _median(prior) if prior else None
+        pct = None
+        if med is not None and med != 0:
+            pct = (latest - med) / abs(med) * 100.0
+        rows.append({"host": host, "bench": b, "config": cfg,
+                     "metric": metric, "n": len(vals), "latest": latest,
+                     "median": med, "delta_pct": pct,
+                     "spark": sparkline(vals[-(window + 1):]),
+                     "direction": metric_direction(metric)})
+    return rows
+
+
+def regressions(entries: List[dict], max_regression_pct: float,
+                min_points: int = 3, window: int = 8,
+                bench: Optional[str] = None) -> List[dict]:
+    """Series whose latest point moved > max_regression_pct in the BAD
+    direction vs the trailing median.  Directionless metrics and series
+    shorter than ``min_points`` are exempt (report-only until history
+    accumulates — the CI wiring relies on this to be non-blocking at
+    first)."""
+    out = []
+    for r in trend_rows(entries, bench=bench, window=window):
+        if (r["n"] < min_points or r["direction"] is None
+                or r["delta_pct"] is None):
+            continue
+        bad = r["delta_pct"] if r["direction"] == "lower" else -r["delta_pct"]
+        if bad > max_regression_pct:
+            out.append(dict(r, regression_pct=bad))
+    return out

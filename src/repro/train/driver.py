@@ -33,6 +33,7 @@ class RunConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
     log_every: int = 10
     n_micro: int = 1
+    audit_every: int = 0            # reversible audit cadence (0 = off, §12)
 
 
 def _predicted_peak_bytes(model, optimizer, batch: int, seq: int,
@@ -57,6 +58,20 @@ def _predicted_peak_bytes(model, optimizer, batch: int, seq: int,
         return None
 
 
+def _make_auditor(model, tel, save_memory):
+    """Build the layer auditor lazily at the first audit window.  Guarded:
+    any construction failure (non-reversible config, estimator gaps...)
+    disables audit mode instead of taking the run down."""
+    try:
+        from repro.obs.audit import LayerAuditor, policies_for
+        policies = policies_for(model, save_memory)
+        if policies is None:
+            return None
+        return LayerAuditor(model, tel, policies)
+    except Exception:  # noqa: BLE001
+        return None
+
+
 def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
           params=None, log_fn: Callable = print,
           fail_at_step: Optional[int] = None, plan=None, telemetry=None):
@@ -67,7 +82,12 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
     of the all-reversible default.  ``telemetry`` is a JSONL path or a
     ``repro.obs.Telemetry``: the driver then emits per-step loss/grad-norm/
     step-time events, per-window throughput + MFU + estimator-drift gauges,
-    and checkpoint/compile durations (DESIGN.md §11).
+    and checkpoint/compile durations (DESIGN.md §11).  With
+    ``run.audit_every > 0`` (and live telemetry) every Nth step additionally
+    runs the reversible audit (repro.obs.audit): per-layer reconstruction
+    error, per-policy backward-time/residual-byte attribution, and MoE
+    routing telemetry, bracketed by a recompile watchdog so an audit that
+    perturbs the train step's jit caches is flagged (DESIGN.md §12).
 
     Timing accounting: jit compile time (the first call of each stage step)
     and checkpoint save/restore time are measured and reported as their own
@@ -111,6 +131,7 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
                                "train_step_stage2", tel)
 
     tokens_per_step = data_cfg.global_batch * data_cfg.seq_len
+    micro_b = max(data_cfg.global_batch // run.n_micro, 1)
     flops_per_step = peak = None
     memw = None
     if tel.enabled:
@@ -121,9 +142,11 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
             peak = est.peak_flops()
         except Exception:  # noqa: BLE001
             pass
-        micro_b = max(data_cfg.global_batch // run.n_micro, 1)
         memw = obs.MemoryWatchdog(tel, _predicted_peak_bytes(
             model, optimizer, micro_b, data_cfg.seq_len, save_memory))
+
+    auditor = audit_watch = None
+    audit_on = run.audit_every > 0 and tel.enabled
 
     it = packed_batches(data_cfg, start_step=start_step)
     losses = []
@@ -168,6 +191,25 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
                  stage=1 if step < run.stage1_steps else 2, loss=loss,
                  grad_norm=float(metrics["grad_norm"]), step_s=dt,
                  compiled=compiled)
+        if audit_on and (step + 1) % run.audit_every == 0:
+            if auditor is None:
+                auditor = _make_auditor(model, tel, save_memory)
+                audit_on = auditor is not None
+            if auditor is not None:
+                if audit_watch is None:
+                    audit_watch = obs.RecompileWatchdog(
+                        {"train_step_stage1": step1,
+                         "train_step_stage2": step2}, tel, scope="train")
+                # warm/check bracket the audit call alone: stage 2's later
+                # first compile must not read as an audit-induced recompile
+                audit_watch.mark_warm()
+                try:
+                    ab = {k: v[:micro_b] for k, v in batch.items()}
+                    with tel.span("audit", observe=False):
+                        auditor.run(params, ab, step + 1)
+                except Exception:  # noqa: BLE001 — diagnostics never fatal
+                    audit_on = False
+                audit_watch.check()
         if (step + 1) % run.log_every == 0:
             emit_window(step)
             window_s, window_steps = 0.0, 0

@@ -11,6 +11,7 @@ import pytest
 
 from repro import obs
 from repro.launch import trace
+from repro.obs import trajectory
 from repro.obs.registry import Registry
 from repro.obs.sink import (SCHEMA_VERSION, JsonlSink, read_events,
                             validate_events, write_bench_json)
@@ -427,6 +428,253 @@ def test_trace_validate_fails_on_corrupt_run(tmp_path):
     sink.emit("train_step", step=1, loss=float("inf"))
     sink.close()
     assert trace.main(["validate", path]) == 1
+
+
+# ------------------------------------------------- bench trajectory
+
+def _append_run(tmp_path, i, traj, **metrics):
+    write_bench_json(str(tmp_path / f"BENCH_r{i}.json"), "train_bench",
+                     dict(metrics), config="tiny", trajectory=traj)
+
+
+def test_trajectory_entry_schema_and_flatten(tmp_path):
+    traj = str(tmp_path / "hist" / "BENCH_TRAJECTORY.jsonl")
+    payload = {"step_s": 0.5, "note": "metadata", "ok": True,
+               "rows": [{"name": "a", "loss": 1.0}, {"loss": 2.0}]}
+    write_bench_json(str(tmp_path / "BENCH_x.json"), "x", payload,
+                     config="tiny", trajectory=traj)
+    entries = trajectory.read_trajectory(traj)
+    assert len(entries) == 1
+    e = entries[0]
+    assert e["v"] == obs.TRAJECTORY_SCHEMA_VERSION
+    assert e["bench"] == "x" and e["config"] == "tiny"
+    assert "host" in e and "ts" in e
+    # nested dicts flatten to dotted keys; list items key by their "name";
+    # strings/bools are dropped (the trajectory tracks magnitudes)
+    assert e["metrics"] == {"step_s": 0.5, "rows.a.loss": 1.0,
+                            "rows.1.loss": 2.0}
+
+
+def test_trajectory_path_resolution(tmp_path, monkeypatch):
+    monkeypatch.delenv(trajectory.TRAJECTORY_ENV, raising=False)
+    sib = trajectory.trajectory_path(str(tmp_path / "BENCH_x.json"))
+    assert sib == str(tmp_path / "BENCH_TRAJECTORY.jsonl")
+    monkeypatch.setenv(trajectory.TRAJECTORY_ENV, "/ci/cache/T.jsonl")
+    assert trajectory.trajectory_path("whatever") == "/ci/cache/T.jsonl"
+    assert trajectory.trajectory_path("x", "/explicit.jsonl") == "/explicit.jsonl"
+    # default write appends next to the bench artifact
+    monkeypatch.delenv(trajectory.TRAJECTORY_ENV, raising=False)
+    write_bench_json(str(tmp_path / "BENCH_x.json"), "x", {"a_s": 1.0})
+    assert len(trajectory.read_trajectory(sib)) == 1
+
+
+def test_metric_direction_rules():
+    assert trajectory.metric_direction("step_s") == "lower"
+    assert trajectory.metric_direction("ttft_p90_s") == "lower"
+    assert trajectory.metric_direction("eval_loss") == "lower"
+    # higher-better patterns win over the greedy "_s" suffix rule
+    assert trajectory.metric_direction("steps_per_s") == "higher"
+    assert trajectory.metric_direction("tok_s") == "higher"
+    assert trajectory.metric_direction("mfu") == "higher"
+    # unclassifiable metrics are exempt from the gate
+    assert trajectory.metric_direction("n_layers") is None
+
+
+def test_trend_and_regress_roundtrip(tmp_path, capsys):
+    """Acceptance: a synthetic flat 3-run trajectory passes the regression
+    gate; an injected 25% step-time (and -25% throughput) regression on the
+    next run fails it."""
+    traj = str(tmp_path / "BENCH_TRAJECTORY.jsonl")
+    for i in range(3):
+        _append_run(tmp_path, i, traj, step_s=1.0, steps_per_s=10.0)
+    assert trace.main(["regress", traj]) == 0
+    assert trace.main(["trend", traj]) == 0
+    out = capsys.readouterr().out
+    assert "step_s" in out and "steps_per_s" in out
+    assert "▁" in out                            # sparkline rendered
+
+    _append_run(tmp_path, 3, traj, step_s=1.25, steps_per_s=7.5)
+    assert trace.main(["regress", traj]) == 1    # default gate is 20%
+    out = capsys.readouterr().out
+    assert "regression" in out
+    bad = trajectory.regressions(trajectory.read_trajectory(traj),
+                                 max_regression_pct=20.0)
+    by_metric = {r["metric"]: r for r in bad}
+    assert by_metric["step_s"]["regression_pct"] == pytest.approx(25.0)
+    assert by_metric["steps_per_s"]["regression_pct"] == pytest.approx(25.0)
+    # a *better* latest point never fails the gate
+    _append_run(tmp_path, 4, traj, step_s=0.5, steps_per_s=20.0)
+    assert trace.main(["regress", traj, "--max-regression-pct", "30"]) == 0
+
+
+def test_regress_short_series_is_report_only(tmp_path, capsys):
+    """Series below --min-points never gate: a fresh trajectory (first CI
+    runs after this lands) reports instead of blocking."""
+    traj = str(tmp_path / "BENCH_TRAJECTORY.jsonl")
+    _append_run(tmp_path, 0, traj, step_s=1.0)
+    _append_run(tmp_path, 1, traj, step_s=2.0)   # 100% worse, but n=2
+    assert trace.main(["regress", traj]) == 0
+    assert "report-only" in capsys.readouterr().out
+    assert trajectory.regressions(trajectory.read_trajectory(traj),
+                                  max_regression_pct=20.0, min_points=2)
+
+
+def test_trajectory_tolerates_torn_tail(tmp_path):
+    traj = str(tmp_path / "BENCH_TRAJECTORY.jsonl")
+    for i in range(2):
+        _append_run(tmp_path, i, traj, step_s=1.0)
+    with open(traj, "a") as f:
+        f.write('{"v": 1, "bench": "train_be')     # killed mid-append
+    assert len(trajectory.read_trajectory(traj)) == 2
+
+
+# ------------------------------------------- truncated run files (trace)
+
+def test_trace_tolerates_prefix_truncated_run(train_run, tmp_path):
+    """Regression: a run killed mid-write tears the final JSONL line; the
+    trace CLI must degrade to the valid prefix, not error out."""
+    path, events = train_run
+    data = open(path).read()
+    cut = str(tmp_path / "torn.jsonl")
+    with open(cut, "w") as f:
+        f.write(data[:-25])                  # tear the final line mid-record
+    with pytest.raises(ValueError, match="undecodable"):
+        read_events(cut)                     # strict mode still raises
+    kept = read_events(cut, on_error="skip")
+    assert kept == events[:-1]               # exactly the valid prefix
+    assert trace.main(["summarize", cut]) == 0
+    assert trace.main(["validate", cut, "--max-drift", "2.0"]) == 0
+
+
+# --------------------------------------------- reversible audit (driver)
+
+@pytest.fixture(scope="module")
+def audit_run(tmp_path_factory):
+    """One reduced 4-step train with ``audit_every=2`` (two audit windows:
+    step 2 in stage 1, step 4 in stage 2), with every Telemetry.emit call
+    timed so the telemetry-overhead gate has a deterministic measurement
+    (a wall-clock A/B against NullTelemetry would be compile-noise-bound)."""
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamW
+    from repro.train.driver import RunConfig, train
+
+    tmp = tmp_path_factory.mktemp("obs_audit")
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    model = Model(cfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=2)
+    rc = RunConfig(total_steps=4, stage1_steps=2, ckpt_every=100,
+                   ckpt_dir=str(tmp / "ckpt"), log_every=2, audit_every=2)
+    path = str(tmp / "run.jsonl")
+    tel = obs.Telemetry(path=path, role="train", config=cfg.name)
+
+    overhead = {"s": 0.0, "n": 0}
+    real_emit = tel.emit
+
+    def timed_emit(kind, **fields):
+        t0 = time.perf_counter()
+        ev = real_emit(kind, **fields)
+        overhead["s"] += time.perf_counter() - t0
+        overhead["n"] += 1
+        return ev
+
+    tel.emit = timed_emit
+    t0 = time.perf_counter()
+    train(model, AdamW(lr=1e-3), dc, rc, telemetry=tel,
+          log_fn=lambda *_: None)
+    wall = time.perf_counter() - t0
+    tel.close()
+    return path, read_events(path), overhead, wall
+
+
+def test_audit_emits_per_layer_attribution(audit_run):
+    _, events, _, _ = audit_run
+    la = [e for e in events if e["kind"] == "layer_audit"]
+    assert len(la) == 8                      # 2 audit windows x 4 layers
+    assert sorted({e["step"] for e in la}) == [2, 4]
+    assert sorted(e["layer"] for e in la if e["step"] == 2) == [0, 1, 2, 3]
+    for e in la:
+        assert e["policy"] == "reversible"   # paper-default all-reversible
+        assert 0.0 <= e["recon_rel"] <= 1e-3     # acceptance: <= 1e-3 rel
+        assert e["recon_max_abs"] >= e["recon_mean_abs"] >= 0.0
+        assert e["inv_s"] > 0 and e["bwd_s"] > 0
+        assert "residual_bytes" in e
+    summaries = [e for e in events if e["kind"] == "audit_summary"]
+    assert len(summaries) == 2
+    for s in summaries:
+        assert s["n_layers"] == 4
+        pp = s["per_policy"]["reversible"]
+        assert pp["layers"] == 4
+        assert pp["bwd_s"] > 0 and pp["inv_s"] > 0
+        assert s["recon_rel_max"] <= 1e-3
+        assert s["recon_rel_mean"] <= s["recon_rel_max"]
+        assert s["audit_s"] > 0
+
+
+def test_audit_emits_moe_routing_telemetry(audit_run):
+    _, events, _, _ = audit_run
+    moe = [e for e in events if e["kind"] == "moe_route"]
+    assert len(moe) == 8                     # every reduced layer is MoE
+    assignments = 2 * 64 * 2                 # micro-batch tokens x top_k
+    for e in moe:
+        assert e["imbalance"] >= 1.0         # max/mean load, 1.0 = uniform
+        assert e["entropy"] >= 0.0
+        assert 0.0 <= e["dropped_fraction"] <= 1.0
+        assert sum(e["expert_load"]) == assignments
+        assert "ep_payload_drift_x" not in e     # no EP on this config
+    end = events[-1]
+    assert end["kind"] == "run_end"
+    assert end["metrics"]["counters"]["audit.runs"] == 2
+    gauges = end["metrics"]["gauges"]
+    assert "moe.imbalance" in gauges and "audit.recon_rel_max" in gauges
+
+
+def test_audit_validate_gate_and_summarize(audit_run, capsys):
+    path, _, _, _ = audit_run
+    assert trace.main(["validate", path,
+                       "--max-reconstruction-err", "1e-3"]) == 0
+    # an absurdly tight bound must FAIL on real float32 inversion error
+    assert trace.main(["validate", path,
+                       "--max-reconstruction-err", "1e-12"]) == 1
+    capsys.readouterr()
+    assert trace.main(["summarize", path]) == 0
+    out = capsys.readouterr().out
+    assert "layer audit" in out
+    assert "per-policy totals" in out
+    assert "worst reconstruction" in out
+    assert "moe routing" in out
+
+
+def test_audit_does_not_perturb_train_jit(audit_run):
+    """Acceptance: audit mode re-walks layers in its own jitted fns; the
+    train step's caches must not grow (the watchdog brackets each audit)."""
+    _, events, _, _ = audit_run
+    assert not [e for e in events if e["kind"] == "recompile"]
+    assert validate_events(events, require_zero_recompiles=True,
+                           max_reconstruction_err=1e-3) == []
+    # the watchdog armed once per audit window
+    assert len([e for e in events if e["kind"] == "warmup_done"]) == 2
+
+
+def test_audit_off_emits_nothing(train_run):
+    path, events = train_run
+    kinds = {e["kind"] for e in events}
+    assert not kinds & {"layer_audit", "moe_route", "audit_summary"}
+    # the gate flag on an audit-less run is an error, not a silent pass
+    assert trace.main(["validate", path,
+                       "--max-reconstruction-err", "1e-3"]) == 1
+
+
+def test_telemetry_overhead_bounded(audit_run):
+    """Acceptance (satellite): telemetry costs <= ~5% of train wall time on
+    the reduced config.  Measured as accumulated emit-path seconds over the
+    whole audited run (the strictest window: compile + audit included)."""
+    _, _, overhead, wall = audit_run
+    assert overhead["n"] >= 20                   # it actually measured
+    assert overhead["s"] <= 0.05 * wall, (
+        f"telemetry emit path took {overhead['s']:.3f}s of {wall:.1f}s "
+        f"({100 * overhead['s'] / wall:.2f}% > 5%)")
 
 
 # ------------------------------------------------------- estimator hook
