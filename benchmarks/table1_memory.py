@@ -112,6 +112,38 @@ def run(B=4, S=256, tel=None):
     return rows
 
 
+def measure_fused_peak(B=4, S=256):
+    """Compiled-step peak scratch bytes, fused optimizer-in-backward vs the
+    unfused step (DESIGN.md §13), for AdamW and LoMo on the same reduced
+    qwen2-moe shape as the table.  The quantity is XLA's own
+    ``memory_analysis().temp_size_in_bytes`` of the fully-lowered donated
+    step — everything that is not an argument or output, i.e. exactly the
+    gradients/activations scratch the fused walk attacks (params and
+    optimizer state are donated arguments in both and cancel).  Gate:
+    fused must be strictly below unfused for every optimizer."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layers=4, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S),
+                                          0, cfg.vocab_size)}
+    rows = []
+    for name, opt in (("adamw", AdamW(lr=1e-4)), ("lomo", LoMo(lr=1e-4))):
+        ost = opt.init(params)
+        peaks = {}
+        for mode, fused in (("unfused", False), ("fused", True)):
+            step = make_train_step(model, opt, fused=fused)
+            compiled = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params, ost, batch).compile()
+            peaks[mode] = int(compiled.memory_analysis().temp_size_in_bytes)
+        rows.append({"method": name,
+                     "unfused_peak_temp_bytes": peaks["unfused"],
+                     "fused_peak_temp_bytes": peaks["fused"],
+                     "fused_over_unfused": peaks["fused"] / peaks["unfused"],
+                     "ok": peaks["fused"] < peaks["unfused"]})
+    return rows
+
+
 def validate_estimator(B=4, S=256, tol=0.10):
     """Cross-check repro.memory.estimator's static predictions against the
     measured quantities of this benchmark: per-policy residual bytes must
@@ -151,7 +183,28 @@ def main():
     ap.add_argument("--out", default="BENCH_table1_memory.json")
     ap.add_argument("--telemetry", default=None, metavar="PATH",
                     help="also write the span-level telemetry JSONL to PATH")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="measure only the fused-vs-unfused compiled peak "
+                         "comparison (fast; the CI fused-optimizer gate)")
     args = ap.parse_args()
+
+    print("fused optimizer peak (compiled temp bytes, fused vs unfused):")
+    bad = 0
+    fused_rows = measure_fused_peak()
+    for r in fused_rows:
+        bad += not r["ok"]
+        print(f"  {r['method']:<8} unfused "
+              f"{r['unfused_peak_temp_bytes'] / 2**20:8.1f} MiB  fused "
+              f"{r['fused_peak_temp_bytes'] / 2**20:8.1f} MiB  "
+              f"(x{r['fused_over_unfused']:.2f}) "
+              f"{'OK' if r['ok'] else 'NOT BELOW UNFUSED'}")
+    if args.fused_only:
+        obs.write_bench_json(args.out, "table1_fused_peak", {
+            "fused_peak": fused_rows,
+            "gates": {"fused_peak_regressions": bad},
+        }, config="qwen2-moe-a2.7b")
+        print(f"wrote {args.out}")
+        return 1 if bad else 0
 
     tel = obs.Telemetry(path=args.telemetry, role="table1-bench",
                         config="qwen2-moe-a2.7b")
@@ -160,7 +213,6 @@ def main():
     for name, res, ost, tput in rows:
         print(f"{name},{res:.1f},{ost:.1f},{tput:.2f}")
     print("\nestimator validation (static prediction vs measured):")
-    bad = 0
     est_rows = validate_estimator()
     for label, pred, meas, ok in est_rows:
         bad += not ok
@@ -171,10 +223,14 @@ def main():
     obs.write_bench_json(args.out, "table1_memory", {
         "rows": [{"method": n, "residual_MiB": r, "opt_state_MiB": o,
                   "samples_per_s": t} for n, r, o, t in rows],
+        "fused_peak": fused_rows,
         "estimator_validation": [
             {"label": lb, "predicted_bytes": p, "measured_bytes": m,
              "ok": bool(ok)} for lb, p, m, ok in est_rows],
-        "gates": {"estimator_mismatches": bad},
+        "gates": {"estimator_mismatches": sum(
+            not ok for *_, ok in est_rows),
+            "fused_peak_regressions": sum(
+                not r["ok"] for r in fused_rows)},
     }, config="qwen2-moe-a2.7b")
     print(f"wrote {args.out}")
     return 1 if bad else 0

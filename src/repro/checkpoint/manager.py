@@ -114,11 +114,28 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
         meta = json.load(f)
     dtypes = meta.get("dtypes")
     flat, treedef = _flatten(like)
+    n_saved = meta.get("n_leaves", len(flat))
+    if n_saved != len(flat):
+        raise ValueError(
+            f"checkpoint {d} holds {n_saved} leaves but the restore "
+            f"target has {len(flat)}: the saved tree does not match the "
+            f"current structure.  If this is optimizer state, the run was "
+            f"likely saved under a different optimizer (AdamW carries m/v "
+            f"moments, GaLore low-rank projector leaves, LOMO f32 masters "
+            f"for sub-f32 params only) — restore with the optimizer the "
+            f"checkpoint was written with, or restart from scratch.")
     leaves = []
     for i, x in enumerate(flat):
         arr = data[f"a{i}"]
         if dtypes and dtypes[i] == "bfloat16":
             import ml_dtypes
             arr = arr.view(ml_dtypes.bfloat16)
+        want = getattr(x, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(
+                f"checkpoint {d} leaf {i} has shape {tuple(arr.shape)} but "
+                f"the restore target expects {tuple(want)}: the saved tree "
+                f"does not match the current structure (optimizer-state "
+                f"layout or model config mismatch).")
         leaves.append(jax.numpy.asarray(arr).astype(x.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -97,6 +97,31 @@ def _zeros_tangent(tree):
     return jax.tree_util.tree_map(z, tree)
 
 
+def zero_shared(shared):
+    """Zero cotangent accumulator for a shared tree: zeros for inexact
+    leaves, ``None`` placeholders for integer leaves (filled to float0 by
+    ``shared_cotangent`` once accumulation is done)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(jnp.shape(x), jnp.result_type(x))
+        if jnp.issubdtype(jnp.result_type(x), jnp.inexact) else None, shared)
+
+
+def accumulate_shared(csh, dsh):
+    """csh += dsh, skipping the ``None`` (integer-leaf) placeholders."""
+    return jax.tree_util.tree_map(
+        lambda a, b: a + b if a is not None else None, csh, dsh,
+        is_leaf=lambda x: x is None)
+
+
+def shared_cotangent(csh, shared):
+    """Replace ``None`` placeholders with float0 zeros so the accumulated
+    shared cotangent is a valid vjp input/output."""
+    return jax.tree_util.tree_map(
+        lambda z, s: z if z is not None
+        else np.zeros(jnp.shape(s), jax.dtypes.float0),
+        csh, shared, is_leaf=lambda x: x is None)
+
+
 def reversible_stack(block_fwd: Callable, block_inv: Callable, n_layers: int,
                      save_memory=True, half_inv: Callable = None,
                      idx_offset: int = 0):
@@ -148,9 +173,6 @@ def reversible_stack(block_fwd: Callable, block_inv: Callable, n_layers: int,
     def bwd_rule(res, cts):
         stacked, shared, ctx, y1, y2 = res
         ct1, ct2 = cts
-        zero_sh = jax.tree_util.tree_map(
-            lambda x: jnp.zeros(jnp.shape(x), jnp.result_type(x))
-            if jnp.issubdtype(jnp.result_type(x), jnp.inexact) else None, shared)
 
         def body(carry, inp):
             i, lp = inp
@@ -162,21 +184,15 @@ def reversible_stack(block_fwd: Callable, block_inv: Callable, n_layers: int,
                 lambda lp_, sh_, a, b: block_fwd(lp_, sh_, ctx, i, a, b),
                 lp, shared, x1, x2)
             dlp, dsh, d1, d2 = vjp((c1, c2))
-            csh = jax.tree_util.tree_map(
-                lambda a, b: a + b if a is not None else None, csh, dsh,
-                is_leaf=lambda x: x is None)
-            return (x1, x2, d1, d2, csh), dlp
+            return (x1, x2, d1, d2, accumulate_shared(csh, dsh)), dlp
 
-        init = (y1, y2, ct1, ct2, zero_sh)
+        init = (y1, y2, ct1, ct2, zero_shared(shared))
         from repro.core import settings as _s
         (_, _, d1, d2, dsh), dstacked = jax.lax.scan(
             body, init, (idxs, stacked), reverse=True,
             unroll=_s.SCAN_UNROLL)
-        dsh = jax.tree_util.tree_map(
-            lambda z, s: z if z is not None
-            else np.zeros(jnp.shape(s), jax.dtypes.float0),
-            dsh, shared, is_leaf=lambda x: x is None)
-        return dstacked, dsh, _zeros_tangent(ctx), d1, d2
+        return (dstacked, shared_cotangent(dsh, shared),
+                _zeros_tangent(ctx), d1, d2)
 
     apply.defvjp(fwd_rule, bwd_rule)
     return apply
@@ -206,9 +222,6 @@ def _half_stack(block_fwd, half_inv, n_layers, plain, idxs):
         ct1, ct2 = cts
         # y1 of layer k == x1 input of layer k+1 (saved); last layer: y1_fin
         y1_stack = jnp.concatenate([x1_stack[1:], y1_fin[None]], axis=0)
-        zero_sh = jax.tree_util.tree_map(
-            lambda x: jnp.zeros(jnp.shape(x), jnp.result_type(x))
-            if jnp.issubdtype(jnp.result_type(x), jnp.inexact) else None, shared)
 
         def body(carry, inp):
             i, lp, x1_k, y1_k = inp
@@ -219,20 +232,14 @@ def _half_stack(block_fwd, half_inv, n_layers, plain, idxs):
                 lambda lp_, sh_, a, b: block_fwd(lp_, sh_, ctx, i, a, b),
                 lp, shared, x1_k, x2_k)
             dlp, dsh, d1, d2 = vjp((c1, c2))
-            csh = jax.tree_util.tree_map(
-                lambda a, b: a + b if a is not None else None, csh, dsh,
-                is_leaf=lambda x: x is None)
-            return (x2_k, d1, d2, csh), dlp
+            return (x2_k, d1, d2, accumulate_shared(csh, dsh)), dlp
 
-        init = (y2_fin, ct1, ct2, zero_sh)
+        init = (y2_fin, ct1, ct2, zero_shared(shared))
         (_, d1, d2, dsh), dstacked = jax.lax.scan(
             body, init, (idxs, stacked, x1_stack, y1_stack), reverse=True,
             unroll=settings.SCAN_UNROLL)
-        dsh = jax.tree_util.tree_map(
-            lambda z, s: z if z is not None
-            else np.zeros(jnp.shape(s), jax.dtypes.float0),
-            dsh, shared, is_leaf=lambda x: x is None)
-        return dstacked, dsh, _zeros_tangent(ctx), d1, d2
+        return (dstacked, shared_cotangent(dsh, shared),
+                _zeros_tangent(ctx), d1, d2)
 
     apply.defvjp(fwd_rule, bwd_rule)
     return apply
@@ -308,6 +315,184 @@ def mixed_policy_stack(block_fwd: Callable, block_inv: Callable, policies,
         return x1, x2
 
     return apply
+
+
+# ------------------------------------------------- fused optimizer walks
+#
+# The fused train step (repro.train.fused, DESIGN.md §13) does NOT go
+# through custom_vjp: it drives the same per-layer inversion + vjp walk the
+# bwd_rules above run, but hands each layer's parameter cotangent to a
+# ``consume`` callback the moment it exists — the optimizer update (or a
+# grad-norm probe, or a grad-accumulation add) happens inside the scan and
+# the cotangent dies with the scan iteration.  No full gradient tree is
+# ever live.  The walks mirror ``mixed_policy_stack``'s segments:
+#
+#   reversible       — no saves; backward reconstructs inputs by inversion.
+#   store / remat    — forward saves each layer's input streams; backward
+#                      recomputes the layer under jax.vjp from them (store
+#                      degrades to remat here: per-layer recompute is what
+#                      lets the grad die per layer, and it is never worse
+#                      in memory than XLA's default caching).
+#   offload          — like store, but the saved streams park in host
+#                      memory (repro.memory.offload) until backward.
+
+
+def fused_stack_forward(block_fwd: Callable, policies, idx_offset: int = 0):
+    """Gradient-free forward walk.  Returns
+    ``run(stacked, shared, ctx, x1, x2) -> ((y1, y2), saves)`` where
+    ``saves`` has one entry per policy segment: ``None`` for reversible
+    segments, the stacked per-layer input streams otherwise."""
+    from repro.core import settings
+    from repro.memory.offload import to_host
+    segs = policy_segments(policies)
+
+    def run(stacked, shared, ctx, x1, x2):
+        saves = []
+        for start, end, pol in segs:
+            n = end - start
+            seg_params = jax.tree_util.tree_map(
+                lambda a: a[start:end], stacked)
+            idxs = idx_offset + start + jnp.arange(n, dtype=jnp.int32)
+            if pol == "reversible":
+                def body(carry, inp):
+                    i, lp = inp
+                    return block_fwd(lp, shared, ctx, i, *carry), None
+                (x1, x2), _ = jax.lax.scan(body, (x1, x2),
+                                           (idxs, seg_params),
+                                           unroll=settings.SCAN_UNROLL)
+                saves.append(None)
+            else:
+                def body(carry, inp):
+                    i, lp = inp
+                    a, b = carry
+                    return block_fwd(lp, shared, ctx, i, a, b), (a, b)
+                (x1, x2), ins = jax.lax.scan(body, (x1, x2),
+                                             (idxs, seg_params),
+                                             unroll=settings.SCAN_UNROLL)
+                saves.append(to_host(ins) if pol == "offload" else ins)
+        return (x1, x2), saves
+
+    return run
+
+
+def read_layer(stacked, j):
+    """Layer ``j``'s slice of a stacked tree (traced index OK; ``None``
+    leaves pass through)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False),
+        stacked)
+
+
+def write_layer(stacked, update, j):
+    """Write ``update`` into layer ``j`` of a stacked tree.  Inside a scan
+    body this lowers to an in-place dynamic-update-slice on the carried
+    buffer — the reason the fused walk carries the stacked trees instead of
+    emitting new ones as scan ys (which would double-buffer old + new)."""
+    return jax.tree_util.tree_map(
+        lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, j, 0),
+        stacked, update)
+
+
+def fused_stack_backward(block_fwd: Callable, block_inv: Callable, policies,
+                         consume: Callable, idx_offset: int = 0):
+    """Reverse walk with a per-layer cotangent consumer that updates the
+    stacked params/extras IN PLACE.
+
+    ``consume(i, lp, dlp, ex) -> (new_lp, new_ex, stat)``: called once per
+    layer inside the scan with the layer index, the layer's param slice,
+    its parameter cotangent, and the layer's slice of ``extras`` (a stacked
+    tree with leading dim n_layers — optimizer state, grad accumulators...
+    — or ``None``).  ``new_lp``/``new_ex`` are replacement slices written
+    back at layer ``i`` (``None`` = leave unchanged); ``stat`` is a scalar
+    summed across layers (grad squared-norm accumulation).
+
+    The stacked trees ride the scan CARRY and each layer's result lands via
+    ``write_layer`` — with buffer donation XLA keeps the whole update in the
+    parameters' own buffers, so no old+new double buffer and no gradient
+    tree are ever live (the fused optimizer's memory claim).  A layer's
+    slice is read before it is written and no other layer reads it, so the
+    in-place ordering is safe.
+
+    Returns ``run(stacked, extras, saves, shared, ctx, y1, y2, ct1, ct2)
+    -> ((stacked, extras, stat), (x1, x2), (d1, d2), csh)`` where (x1, x2)
+    are the reconstructed stack inputs, (d1, d2) their cotangents and
+    ``csh`` the accumulated shared cotangent (``None`` placeholders on
+    integer leaves; finalize with ``shared_cotangent``)."""
+    from repro.core import settings
+    from repro.memory.offload import to_device
+    segs = policy_segments(policies)
+
+    def run(stacked, extras, saves, shared, ctx, y1, y2, ct1, ct2):
+        assert len(saves) == len(segs), \
+            f"saves/segment mismatch: {len(saves)} vs {len(segs)}"
+        csh = zero_shared(shared)
+        c1, c2 = ct1, ct2
+        stat = jnp.zeros((), jnp.float32)
+
+        def consume_write(i, lp, dlp, st, ex, st_stat, csh_, dsh):
+            new_lp, new_ex, s = consume(i, lp, dlp, ex)
+            if new_lp is not None:
+                st = write_layer(st, new_lp, i - idx_offset)
+            return st, new_ex, st_stat + s, accumulate_shared(csh_, dsh)
+
+        for k in range(len(segs) - 1, -1, -1):
+            start, end, pol = segs[k]
+            n = end - start
+            idxs = idx_offset + start + jnp.arange(n, dtype=jnp.int32)
+            if pol == "reversible":
+                def body(carry, i):
+                    cy1, cy2, cc1, cc2, st, ext, st_stat, csh_ = carry
+                    lp = read_layer(st, i - idx_offset)
+                    ex = None if ext is None else read_layer(ext,
+                                                             i - idx_offset)
+                    x1, x2 = block_inv(lp, shared, ctx, i, cy1, cy2)
+                    x1 = jax.lax.stop_gradient(x1)
+                    x2 = jax.lax.stop_gradient(x2)
+                    _, vjp = jax.vjp(
+                        lambda lp_, sh_, a, b:
+                        block_fwd(lp_, sh_, ctx, i, a, b),
+                        lp, shared, x1, x2)
+                    dlp, dsh, d1, d2 = vjp((cc1, cc2))
+                    st, new_ex, st_stat, csh_ = consume_write(
+                        i, lp, dlp, st, ex, st_stat, csh_, dsh)
+                    if new_ex is not None:
+                        ext = write_layer(ext, new_ex, i - idx_offset)
+                    return (x1, x2, d1, d2, st, ext, st_stat, csh_), None
+                (y1, y2, c1, c2, stacked, extras, stat, csh), _ = \
+                    jax.lax.scan(
+                        body, (y1, y2, c1, c2, stacked, extras, stat, csh),
+                        idxs, reverse=True, unroll=settings.SCAN_UNROLL)
+            else:
+                ins = saves[k]
+                assert ins is not None, f"segment {k} ({pol}) has no saves"
+                if pol == "offload":
+                    ins = to_device(ins)
+                x1s, x2s = ins
+
+                def body(carry, inp):
+                    i, a, b = inp
+                    cc1, cc2, st, ext, st_stat, csh_ = carry
+                    lp = read_layer(st, i - idx_offset)
+                    ex = None if ext is None else read_layer(ext,
+                                                             i - idx_offset)
+                    _, vjp = jax.vjp(
+                        lambda lp_, sh_, a_, b_:
+                        block_fwd(lp_, sh_, ctx, i, a_, b_),
+                        lp, shared, a, b)
+                    dlp, dsh, d1, d2 = vjp((cc1, cc2))
+                    st, new_ex, st_stat, csh_ = consume_write(
+                        i, lp, dlp, st, ex, st_stat, csh_, dsh)
+                    if new_ex is not None:
+                        ext = write_layer(ext, new_ex, i - idx_offset)
+                    return (d1, d2, st, ext, st_stat, csh_), None
+                (c1, c2, stacked, extras, stat, csh), _ = jax.lax.scan(
+                    body, (c1, c2, stacked, extras, stat, csh),
+                    (idxs, x1s, x2s),
+                    reverse=True, unroll=settings.SCAN_UNROLL)
+                y1, y2 = x1s[0], x2s[0]
+        return (stacked, extras, stat), (y1, y2), (c1, c2), csh
+
+    return run
 
 
 # ------------------------------------------------------------ audit hooks

@@ -207,6 +207,10 @@ def plan_main(argv):
                     help="lomo (default) is the paper's single-device "
                          "scenario: fused update, no optimizer state; "
                          "adamw shows the full m/v-state floor instead")
+    ap.add_argument("--fused-optimizer", action="store_true",
+                    help="plan against the fused optimizer-in-backward step "
+                         "(repro.train.fused, DESIGN.md §13): grads floor = "
+                         "non-stack remainder + one layer slice; adamw/lomo")
     ap.add_argument("--reduced", action="store_true",
                     help="plan the smoke-scale configs (CPU tests)")
     ap.add_argument("--moe-backend", default=None,
@@ -236,7 +240,8 @@ def plan_main(argv):
             cfg = cfg.replace(expert_parallel=args.ep)
         try:
             p = plan(cfg, budget_gb=args.budget_gb, batch=args.batch,
-                     seq=args.seq, optimizer=args.optimizer)
+                     seq=args.seq, optimizer=args.optimizer,
+                     fused_optimizer=args.fused_optimizer)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"[FAIL] {arch}: {type(e).__name__}: {str(e)[:300]}",
                   flush=True)

@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--compress", action="store_true",
                     help="int8 gradient compression before reduction")
+    ap.add_argument("--fused-optimizer", action="store_true",
+                    help="fuse the optimizer step into the reversible "
+                         "backward walk (repro.train.fused, DESIGN.md §13): "
+                         "per-layer updates as cotangents are produced, no "
+                         "full gradient tree; adamw/lomo only, requires a "
+                         "reversible config")
     ap.add_argument("--hbm-budget-gb", type=float, default=None,
                     help="fit per-layer activation policies into this budget "
                          "(repro.memory planner); default: config/80 GiB")
@@ -114,7 +120,8 @@ def main():
     rc = RunConfig(total_steps=args.steps, stage1_steps=args.stage1,
                    ckpt_every=max(args.steps // 5, 1), ckpt_dir=args.ckpt_dir,
                    log_every=args.log_every, n_micro=args.n_micro,
-                   audit_every=args.audit_every)
+                   audit_every=args.audit_every,
+                   fused_optimizer=args.fused_optimizer)
     memory_plan = None
     if args.plan or args.hbm_budget_gb is not None:
         from repro.memory.planner import plan as make_plan
@@ -123,7 +130,8 @@ def main():
         per_dev = max(args.batch // (jax.process_count() * args.n_micro), 1)
         memory_plan = make_plan(cfg, budget_gb=args.hbm_budget_gb,
                                 batch=per_dev,
-                                seq=args.seq, optimizer=args.optimizer)
+                                seq=args.seq, optimizer=args.optimizer,
+                                fused_optimizer=args.fused_optimizer)
     _, _, losses = train(model, opt, dc, rc, plan=memory_plan,
                          telemetry=args.telemetry)
     if args.telemetry:

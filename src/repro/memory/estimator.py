@@ -97,7 +97,13 @@ def n_plan_units(model) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class MemoryEstimate:
-    """Byte-level cost model for one (config, microbatch, seq, optimizer)."""
+    """Byte-level cost model for one (config, microbatch, seq, optimizer).
+
+    ``fused`` marks the fused optimizer-in-backward step (repro.train.fused,
+    DESIGN.md §13): ``grad_bytes`` then covers only the non-stack remainder
+    plus one layer's slice of the largest main stack — per-layer cotangents
+    die inside the backward walk.  The fused numbers model ``n_micro == 1``;
+    grad accumulation adds one accumulator tree in the accumulation dtype."""
     arch: str
     family: str
     batch: int
@@ -114,6 +120,7 @@ class MemoryEstimate:
     fixed_act_by_policy: Dict[str, int]
     unit_act_bytes: Dict[str, int]       # per-policy DEVICE bytes per unit
     unit_host_bytes: Dict[str, int]      # per-policy HOST bytes per unit
+    fused: bool = False
 
     def fixed_act_for(self, policies: Sequence[str]) -> int:
         """Depth-free activation residuals of a mixed plan: the heaviest
@@ -141,7 +148,8 @@ def _model_for(cfg: ModelConfig, n_units: int):
 
 def estimate(cfg: ModelConfig, batch: int, seq: int,
              optimizer: str = "adamw",
-             policies: Sequence[str] = POLICIES) -> MemoryEstimate:
+             policies: Sequence[str] = POLICIES,
+             fused: bool = False) -> MemoryEstimate:
     """Build the per-layer cost model for ``cfg`` at microbatch (batch, seq)."""
     from repro.models.model import Model
 
@@ -152,9 +160,27 @@ def estimate(cfg: ModelConfig, batch: int, seq: int,
 
     opt = optimizer_by_name(optimizer)
     opt_bytes = array_bytes(jax.eval_shape(opt.init, aparams))
-    # LoMo's fused/donated update reuses one param-sized buffer; AdamW/GaLore
+    # LoMo's donated update reuses one param-sized buffer; AdamW/GaLore
     # cast the full gradient tree to f32 before the moment update.
     grad_bytes = param_bytes if optimizer == "lomo" else 4 * n_params
+    if fused:
+        # optimizer-in-backward: only the non-stack remainder (embed / norms
+        # / LM head / shared) plus ONE layer's slice of the heaviest main
+        # stack are ever live as gradients
+        per_layer_n = per_layer_b = main_n = main_b = 0
+        for s in model.stacks:
+            if s.role != "main":
+                continue
+            st = aparams["stacks"][s.name]
+            cnt = sum(l.size for l in jax.tree_util.tree_leaves(st))
+            byt = array_bytes(st)
+            main_n += cnt
+            main_b += byt
+            per_layer_n = max(per_layer_n, cnt // s.n)
+            per_layer_b = max(per_layer_b, byt // s.n)
+        grad_bytes = ((param_bytes - main_b) + per_layer_b
+                      if optimizer == "lomo"
+                      else 4 * ((n_params - main_n) + per_layer_n))
 
     # host bytes for an offloaded unit: its input streams (x1 + x2 = d_model
     # per token) for each model layer in the unit.
@@ -191,7 +217,7 @@ def estimate(cfg: ModelConfig, batch: int, seq: int,
         optimizer=optimizer, n_units=n_plan_units(model), unit_layers=k,
         param_bytes=param_bytes, grad_bytes=grad_bytes, opt_bytes=opt_bytes,
         fixed_act_by_policy=fixed_act, unit_act_bytes=unit_act,
-        unit_host_bytes=unit_host)
+        unit_host_bytes=unit_host, fused=fused)
 
 
 def residual_attribution(est: MemoryEstimate, policies: Sequence[str]):

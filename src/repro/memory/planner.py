@@ -59,9 +59,10 @@ class MemoryPlan:
 
     def report(self) -> str:
         e = self.est
+        opt_label = (f"{self.optimizer}+fused" if e.fused else self.optimizer)
         lines = [
             f"memory plan: {self.arch}  microbatch={self.batch}x{self.seq} "
-            f"optimizer={self.optimizer}  budget={self.budget_bytes / GiB:.1f} GiB",
+            f"optimizer={opt_label}  budget={self.budget_bytes / GiB:.1f} GiB",
             f"  fixed   params {_fmt_gib(e.param_bytes)}  "
             f"grads {_fmt_gib(e.grad_bytes)}  opt {_fmt_gib(e.opt_bytes)}  "
             f"head/loss act {_fmt_gib(e.fixed_act_for(self.policies))}   [GiB]",
@@ -92,10 +93,18 @@ class MemoryPlan:
                 f"(∝ 1/EP), expected wire "
                 f"{m['a2a_expected_wire_bytes'] / GiB:.3f} GiB, "
                 f"dense-emulation buffer {m['a2a_buffer_bytes'] / GiB:.3f} GiB")
-        verdict = "FITS" if self.fits else (
-            f"DOES NOT FIT (over by {(self.device_bytes - self.budget_bytes) / GiB:.2f} GiB"
-            + (", try --optimizer lomo" if self.optimizer != "lomo" else "")
-            + ")")
+        if self.fits:
+            verdict = "FITS"
+        else:
+            levers = []
+            if not e.fused and self.optimizer in ("adamw", "lomo"):
+                levers.append("--fused-optimizer")
+            if self.optimizer != "lomo":
+                levers.append("--optimizer lomo")
+            verdict = (
+                f"DOES NOT FIT (over by "
+                f"{(self.device_bytes - self.budget_bytes) / GiB:.2f} GiB"
+                + (", try " + " / ".join(levers) if levers else "") + ")")
         lines.append(
             f"  estimated device peak {self.device_bytes / GiB:.2f} GiB "
             f"of {self.budget_bytes / GiB:.1f} GiB -> {verdict}")
@@ -127,7 +136,8 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
          batch: int = 8, seq: int = 4096,
          optimizer: str = "adamw",
          estimate: Optional[MemoryEstimate] = None,
-         trace_check: bool = True) -> MemoryPlan:
+         trace_check: bool = True,
+         fused_optimizer: bool = False) -> MemoryPlan:
     """Fit per-unit activation policies for ``cfg`` into the HBM budget.
 
     Candidate plans are generated in escalating aggressiveness (all-store,
@@ -136,9 +146,15 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
     plan wins.  The linear per-unit model decides *how many* units flip
     inside a stage; the trace decides *whether* the stage suffices (the
     linear fixed-cost term is depth-extrapolated and slightly pessimistic).
+
+    ``fused_optimizer`` plans against the fused optimizer-in-backward step
+    (repro.train.fused): the grads floor drops to the non-stack remainder
+    plus one layer slice, which can flip a config from unfit to feasible
+    without touching activation policies.
     """
     budget = int((budget_gb or cfg.hbm_budget_gb or DEFAULT_BUDGET_GB) * GiB)
-    e = estimate or est_mod.estimate(cfg, batch, seq, optimizer=optimizer)
+    e = estimate or est_mod.estimate(cfg, batch, seq, optimizer=optimizer,
+                                     fused=fused_optimizer)
     recompute = "reversible" if cfg.reversible else "remat"
     attn_bwd = (None if cfg.family == "ssm"
                 else est_mod.attention_backward_cost(cfg, batch, seq))

@@ -831,10 +831,24 @@ class Model:
     def loss(self, params, batch, save_memory=True):
         """Next-token cross-entropy.  batch: tokens (B,S) [+ enc_feats/img].
         Sequence-chunked so the full (B,S,vocab) logits never materialise."""
-        cfg = self.cfg
         tokens = batch["tokens"]
         extras = {k: v for k, v in batch.items() if k in ("enc_feats", "img")}
         h = self.hidden(params, tokens, extras or None, save_memory)
+        return self._token_loss(params, h, batch)
+
+    def loss_from_streams(self, params, y1, y2, batch):
+        """Tail of ``loss`` from the main stacks' output streams: final norm
+        + LM head + token CE.  The fused train step (repro.train.fused)
+        differentiates this piece separately from the per-layer walk, so it
+        must match ``hidden``'s epilogue + ``loss``'s CE exactly."""
+        h = rms_norm(merge_streams(y1, y2), params["final_norm"],
+                     self.cfg.norm_eps)
+        return self._token_loss(params, self._constrain(h), batch)
+
+    def _token_loss(self, params, h, batch):
+        """Masked, sequence-chunked CE from final-normed hidden states."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
         B, S, _ = h.shape
         tgt = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)  # last pos dummy
         valid = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)

@@ -30,39 +30,99 @@ class AdamW:
                 "v": jax.tree_util.tree_map(zeros, params),
                 "step": jnp.zeros((), jnp.int32)}
 
+    def update_leaf(self, p, g, st, *, step, scale=1.0, mask=1.0, skip=None):
+        """One parameter leaf: AdamW with pre-scaled f32 grad.  ``st`` is
+        ``{"m", "v"}`` (any leading layer slice of the full state), ``scale``
+        the deferred global-norm clip factor, ``skip`` an optional bool that
+        freezes params AND moments (non-finite grad step)."""
+        gf = g.astype(jnp.float32) * scale
+        b1, b2 = self.b1, self.b2
+        m = b1 * st["m"] + (1 - b1) * gf
+        v = b2 * st["v"] + (1 - b2) * gf * gf
+        sf = step.astype(jnp.float32)
+        mh = m / (1 - b1 ** sf)
+        vh = v / (1 - b2 ** sf)
+        lr = self.lr * (self.lr_schedule(step) if self.lr_schedule else 1.0)
+        u = mh / (jnp.sqrt(vh) + self.eps)
+        if self.weight_decay:
+            u = u + self.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u * mask).astype(p.dtype)
+        if skip is not None:
+            new_p = jnp.where(skip, p, new_p)
+            m = jnp.where(skip, st["m"], m)
+            v = jnp.where(skip, st["v"], v)
+        return new_p, {"m": m, "v": v}
+
+    def per_param_trees(self, state):
+        return {"m": state["m"], "v": state["v"]}
+
+    def build_state(self, parts, step):
+        return {"m": parts["m"], "v": parts["v"], "step": step}
+
     def update(self, grads, state, params, mask=None):
         step = state["step"] + 1
-        gf = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
-        if self.clip_norm:
-            gn = global_norm(gf)
-            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
-            gf = jax.tree_util.tree_map(lambda g: g * scale, gf)
-
-        b1, b2 = self.b1, self.b2
-        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
-                                   state["m"], gf)
-        v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
-                                   state["v"], gf)
-        mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** step.astype(jnp.float32)), m)
-        vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** step.astype(jnp.float32)), v)
-        lr = self.lr * (self.lr_schedule(step) if self.lr_schedule else 1.0)
-
-        def upd(p, mh_, vh_, mk):
-            u = mh_ / (jnp.sqrt(vh_) + self.eps)
-            if self.weight_decay:
-                u = u + self.weight_decay * p.astype(jnp.float32)
-            u = lr * u * mk
-            return (p.astype(jnp.float32) - u).astype(p.dtype)
-
-        if mask is None:
-            mask = jax.tree_util.tree_map(lambda _: 1.0, params)
-        new_params = jax.tree_util.tree_map(upd, params, mh, vh, mask)
-        return new_params, {"m": m, "v": v, "step": step}
+        scale, skip = ((1.0, None) if not self.clip_norm
+                       else clip_guard(global_norm_sq(grads), self.clip_norm))
+        new_p, parts = apply_subtree(self, params, grads,
+                                     self.per_param_trees(state),
+                                     step=step, scale=scale, mask=mask,
+                                     skip=skip)
+        return new_p, self.build_state(parts, step)
 
 
 def global_norm(tree) -> jax.Array:
     sq = jax.tree_util.tree_map(lambda g: jnp.sum(jnp.square(g)), tree)
     return jnp.sqrt(jax.tree_util.tree_reduce(lambda a, b: a + b, sq, 0.0))
+
+
+def global_norm_sq(tree) -> jax.Array:
+    """Sum of squared f32 leaf norms.  Each leaf is cast and reduced
+    independently, so no full f32 copy of the tree is ever live — the fused
+    backward accumulates these per layer for the deferred-clip pass."""
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jax.tree_util.tree_reduce(lambda a, b: a + b, sq, 0.0)
+
+
+def clip_guard(gn_sq, clip_norm):
+    """(scale, skip) from a squared global norm.  ``scale`` clips the update
+    to ``clip_norm``; a non-finite norm (overflow/NaN anywhere in the grads)
+    returns ``skip=True`` with scale 0 so the caller freezes the step instead
+    of writing NaN into every parameter."""
+    gn = jnp.sqrt(gn_sq)
+    finite = jnp.isfinite(gn)
+    scale = jnp.where(finite,
+                      jnp.minimum(1.0, clip_norm / (gn + 1e-9)), 0.0)
+    return scale, ~finite
+
+
+def apply_subtree(opt, params, grads, parts, *, step, scale=1.0, mask=None,
+                  skip=None):
+    """Drive ``opt.update_leaf`` across a params subtree.
+
+    ``parts`` is a dict of state components (``per_param_trees``), each a
+    tree matching ``params`` leaf-for-leaf (``None`` sub-leaves allowed, e.g.
+    LoMo masters for f32 params).  ``mask`` is ``None`` or a tree of scalars.
+    Returns ``(new_params, new_parts)`` with the same layouts — works
+    unchanged on the full tree, a non-stack subtree, or one scan-sliced
+    layer of a stacked tree."""
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    names = list(parts)
+    flat_parts = {k: tdef.flatten_up_to(parts[k]) for k in names}
+    flat_mk = ([1.0] * len(flat_p) if mask is None
+               else tdef.flatten_up_to(mask))
+    new_p, new_parts = [], {k: [] for k in names}
+    for i, (p, g, mk) in enumerate(zip(flat_p, flat_g, flat_mk)):
+        st = {k: flat_parts[k][i] for k in names}
+        np_, nst = opt.update_leaf(p, g, st, step=step, scale=scale,
+                                   mask=mk, skip=skip)
+        new_p.append(np_)
+        for k in names:
+            new_parts[k].append(nst[k])
+    return (jax.tree_util.tree_unflatten(tdef, new_p),
+            {k: jax.tree_util.tree_unflatten(tdef, new_parts[k])
+             for k in names})
 
 
 def cosine_schedule(warmup: int, total: int):

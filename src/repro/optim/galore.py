@@ -65,61 +65,79 @@ class GaLore:
         return {"leaves": jax.tree_util.tree_map(leaf, params),
                 "step": jnp.zeros((), jnp.int32)}
 
-    def update(self, grads, state, params, mask=None):
-        step = state["step"] + 1
-        refresh = (step - 1) % self.proj_gap == 0
+    def update_leaf(self, p, g, st, *, step, scale=1.0, mask=1.0, skip=None):
+        """One leaf of the low-rank Adam update.  ``st`` is ``{"leaves":
+        {"m", "v"[, "proj"]}}`` (the per-leaf slice of ``state["leaves"]``).
+
+        NOTE: GaLore's projector is fit to the *layer-stacked* gradient
+        matrix at init, so slicing a stacked leaf per layer changes which
+        subspace the SVD sees — the fused per-layer walk therefore rejects
+        GaLore rather than silently diverging from the unfused step; this
+        API exists for the shared tree driver and whole-leaf callers."""
         b1, b2 = self.b1, self.b2
-        if mask is None:
-            mask = jax.tree_util.tree_map(lambda _: 1.0, params)
-
-        def leaf(p, g, st, mk):
-            g = g.astype(jnp.float32)
-            use, side, _ = self._leaf_meta(p)
-            if not use:
-                m = b1 * st["m"] + (1 - b1) * g
-                v = b2 * st["v"] + (1 - b2) * g * g
-                upd = m / (jnp.sqrt(v) + self.eps)
-                new_p = (p.astype(jnp.float32) - self.lr * upd * mk).astype(p.dtype)
-                return new_p, {"m": m, "v": v}
-
-            def proj_fn(gg):
-                pr, _ = _svd_proj(gg, self.rank)
-                return pr
-            if p.ndim == 3:
-                new_proj = jax.lax.cond(
-                    refresh, lambda: jax.vmap(proj_fn)(g), lambda: st["proj"])
-            else:
-                new_proj = jax.lax.cond(
-                    refresh, lambda: proj_fn(g), lambda: st["proj"])
-
-            def project(gg, pr):
-                return pr.T @ gg if side == 0 else gg @ pr
-            def unproject(rr, pr):
-                return pr @ rr if side == 0 else rr @ pr.T
-            if p.ndim == 3:
-                R = jax.vmap(project)(g, new_proj)
-            else:
-                R = project(g, new_proj)
-            m = b1 * st["m"] + (1 - b1) * R
-            v = b2 * st["v"] + (1 - b2) * R * R
-            upd_r = m / (jnp.sqrt(v) + self.eps)
-            if p.ndim == 3:
-                upd = jax.vmap(unproject)(upd_r, new_proj)
-            else:
-                upd = unproject(upd_r, new_proj)
+        st = st["leaves"]
+        refresh = (step - 1) % self.proj_gap == 0
+        g = g.astype(jnp.float32) * scale
+        use, side, _ = self._leaf_meta(p)
+        if not use:
+            m = b1 * st["m"] + (1 - b1) * g
+            v = b2 * st["v"] + (1 - b2) * g * g
+            upd = m / (jnp.sqrt(v) + self.eps)
             new_p = (p.astype(jnp.float32)
-                     - self.lr * self.scale * upd * mk).astype(p.dtype)
-            return new_p, {"m": m, "v": v, "proj": new_proj}
+                     - self.lr * upd * mask).astype(p.dtype)
+            if skip is not None:
+                new_p = jnp.where(skip, p, new_p)
+                m = jnp.where(skip, st["m"], m)
+                v = jnp.where(skip, st["v"], v)
+            return new_p, {"leaves": {"m": m, "v": v}}
 
-        flat_p, tdef = jax.tree_util.tree_flatten(params)
-        flat_g = jax.tree_util.tree_leaves(grads)
-        flat_s = tdef.flatten_up_to(state["leaves"])
-        flat_m = jax.tree_util.tree_leaves(mask)
-        outs = [leaf(p, g, s, mk) for p, g, s, mk
-                in zip(flat_p, flat_g, flat_s, flat_m)]
-        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
-        new_leaves = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
-        return new_params, {"leaves": new_leaves, "step": step}
+        def proj_fn(gg):
+            pr, _ = _svd_proj(gg, self.rank)
+            return pr
+        if p.ndim == 3:
+            new_proj = jax.lax.cond(
+                refresh, lambda: jax.vmap(proj_fn)(g), lambda: st["proj"])
+        else:
+            new_proj = jax.lax.cond(
+                refresh, lambda: proj_fn(g), lambda: st["proj"])
+
+        def project(gg, pr):
+            return pr.T @ gg if side == 0 else gg @ pr
+        def unproject(rr, pr):
+            return pr @ rr if side == 0 else rr @ pr.T
+        if p.ndim == 3:
+            R = jax.vmap(project)(g, new_proj)
+        else:
+            R = project(g, new_proj)
+        m = b1 * st["m"] + (1 - b1) * R
+        v = b2 * st["v"] + (1 - b2) * R * R
+        upd_r = m / (jnp.sqrt(v) + self.eps)
+        if p.ndim == 3:
+            upd = jax.vmap(unproject)(upd_r, new_proj)
+        else:
+            upd = unproject(upd_r, new_proj)
+        new_p = (p.astype(jnp.float32)
+                 - self.lr * self.scale * upd * mask).astype(p.dtype)
+        if skip is not None:
+            new_p = jnp.where(skip, p, new_p)
+            m = jnp.where(skip, st["m"], m)
+            v = jnp.where(skip, st["v"], v)
+            new_proj = jnp.where(skip, st["proj"], new_proj)
+        return new_p, {"leaves": {"m": m, "v": v, "proj": new_proj}}
+
+    def per_param_trees(self, state):
+        return {"leaves": state["leaves"]}
+
+    def build_state(self, parts, step):
+        return {"leaves": parts["leaves"], "step": step}
+
+    def update(self, grads, state, params, mask=None):
+        from repro.optim.adamw import apply_subtree
+        step = state["step"] + 1
+        new_p, parts = apply_subtree(self, params, grads,
+                                     self.per_param_trees(state),
+                                     step=step, mask=mask)
+        return new_p, self.build_state(parts, step)
 
 
 def state_bytes(state) -> int:

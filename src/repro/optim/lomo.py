@@ -3,7 +3,16 @@
 The PyTorch LoMo fuses SGD into backward hooks so gradients never persist.
 JAX's functional AD has no hooks; the equivalent memory semantics here are
 (a) no m/v state at all and (b) the jitted step donates the gradient buffers
-so XLA reuses them in-place (DESIGN.md §2).
+so XLA reuses them in-place (DESIGN.md §2).  (The fully-fused equivalent —
+per-layer updates inside the reversible backward walk — is
+repro.train.fused, which drives ``update_leaf`` below.)
+
+Sub-f32 params get an f32 master copy in the optimizer state: updating a
+bf16 weight in-place drops any step smaller than ~2^-8 of the weight
+(bf16 has 8 mantissa bits), which at fine-tune learning rates silently
+freezes training.  The master accumulates the exact f32 iterate and the
+param is its rounded shadow.  f32 params keep ``None`` masters, so the
+"zero state" memory story is unchanged for f32 runs.
 """
 from __future__ import annotations
 
@@ -12,6 +21,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.optim.adamw import apply_subtree, clip_guard, global_norm_sq
+
+
+def needs_master(p) -> bool:
+    """True for floating params below 32-bit (bf16/f16/fp8...)."""
+    return jnp.issubdtype(p.dtype, jnp.floating) and p.dtype.itemsize < 4
+
 
 @dataclasses.dataclass(frozen=True)
 class LoMo:
@@ -19,21 +35,35 @@ class LoMo:
     clip_norm: float = 1.0
 
     def init(self, params):
-        return {"step": jnp.zeros((), jnp.int32)}
+        master = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32) if needs_master(p) else None,
+            params)
+        return {"step": jnp.zeros((), jnp.int32), "master": master}
+
+    def update_leaf(self, p, g, st, *, step, scale=1.0, mask=1.0, skip=None):
+        """One SGD leaf.  The f32 base is the master when present (sub-f32
+        param), else the param itself; ``skip`` freezes the leaf on a
+        non-finite grad step."""
+        master = st.get("master")
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - self.lr * scale * g.astype(jnp.float32) * mask
+        if skip is not None:
+            new = jnp.where(skip, base, new)
+        return new.astype(p.dtype), {
+            "master": new if master is not None else None}
+
+    def per_param_trees(self, state):
+        return {"master": state["master"]}
+
+    def build_state(self, parts, step):
+        return {"step": step, "master": parts["master"]}
 
     def update(self, grads, state, params, mask=None):
-        if mask is None:
-            mask = jax.tree_util.tree_map(lambda _: 1.0, params)
-        if self.clip_norm:
-            from repro.optim.adamw import global_norm
-            gn = global_norm(grads)
-            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
-        else:
-            scale = 1.0
-
-        def upd(p, g, mk):
-            return (p.astype(jnp.float32)
-                    - self.lr * scale * g.astype(jnp.float32) * mk).astype(p.dtype)
-
-        return (jax.tree_util.tree_map(upd, params, grads, mask),
-                {"step": state["step"] + 1})
+        step = state["step"] + 1
+        scale, skip = ((1.0, None) if not self.clip_norm
+                       else clip_guard(global_norm_sq(grads), self.clip_norm))
+        new_p, parts = apply_subtree(self, params, grads,
+                                     self.per_param_trees(state),
+                                     step=step, scale=scale, mask=mask,
+                                     skip=skip)
+        return new_p, self.build_state(parts, step)

@@ -34,10 +34,11 @@ class RunConfig:
     log_every: int = 10
     n_micro: int = 1
     audit_every: int = 0            # reversible audit cadence (0 = off, §12)
+    fused_optimizer: bool = False   # optimizer-in-backward step (§13)
 
 
 def _predicted_peak_bytes(model, optimizer, batch: int, seq: int,
-                          save_memory) -> Optional[int]:
+                          save_memory, fused: bool = False) -> Optional[int]:
     """Static peak-HBM prediction for the drift gauge (repro.memory
     estimator, DESIGN.md §11).  Guarded: telemetry must never take the run
     down, so any estimator failure just disables the prediction."""
@@ -46,7 +47,8 @@ def _predicted_peak_bytes(model, optimizer, batch: int, seq: int,
         opt_name = type(optimizer).__name__.lower()
         if opt_name not in ("adamw", "lomo", "galore"):
             opt_name = "adamw"
-        e = est.estimate(model.cfg, batch, seq, optimizer=opt_name)
+        e = est.estimate(model.cfg, batch, seq, optimizer=opt_name,
+                         fused=fused)
         if isinstance(save_memory, (list, tuple)):
             policies = list(save_memory)
         elif save_memory and model.cfg.reversible:
@@ -121,10 +123,12 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
 
     step1 = make_train_step(model, optimizer, n_micro=run.n_micro,
                             mask_fn=schedule.stage1_mask,
-                            save_memory=save_memory)
+                            save_memory=save_memory,
+                            fused=run.fused_optimizer)
     step2 = make_train_step(model, optimizer, n_micro=run.n_micro,
                             mask_fn=schedule.stage2_mask,
-                            save_memory=save_memory)
+                            save_memory=save_memory,
+                            fused=run.fused_optimizer)
     step1 = obs.instrument_jit(jax.jit(step1, donate_argnums=(0, 1)),
                                "train_step_stage1", tel)
     step2 = obs.instrument_jit(jax.jit(step2, donate_argnums=(0, 1)),
@@ -143,7 +147,8 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
         except Exception:  # noqa: BLE001
             pass
         memw = obs.MemoryWatchdog(tel, _predicted_peak_bytes(
-            model, optimizer, micro_b, data_cfg.seq_len, save_memory))
+            model, optimizer, micro_b, data_cfg.seq_len, save_memory,
+            fused=run.fused_optimizer))
 
     auditor = audit_watch = None
     audit_on = run.audit_every > 0 and tel.enabled
@@ -187,10 +192,16 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
             window_s += dt
             window_steps += 1
             tel.histogram("train.step_s").observe(dt)
+        grads_finite = bool(metrics.get("grads_finite", True))
+        if not grads_finite:
+            # the optimizer skipped this update (non-finite global norm,
+            # repro.optim clip_guard): count it so a diverging run is
+            # visible in telemetry instead of silently frozen
+            tel.counter("train.nonfinite_grad_steps").inc()
         tel.emit("train_step", step=step + 1,
                  stage=1 if step < run.stage1_steps else 2, loss=loss,
                  grad_norm=float(metrics["grad_norm"]), step_s=dt,
-                 compiled=compiled)
+                 compiled=compiled, grads_finite=grads_finite)
         if audit_on and (step + 1) % run.audit_every == 0:
             if auditor is None:
                 auditor = _make_auditor(model, tel, save_memory)

@@ -1,0 +1,334 @@
+"""Fused optimizer-in-backward train step (DESIGN.md §13).
+
+The unfused step materialises the entire gradient tree (and, under grad
+accumulation, a second full accumulator) before one monolithic
+``optimizer.update``.  But the reversible backward already walks the stack
+one layer at a time — so this step hands each layer's parameter cotangent
+to the optimizer the moment it exists, inside the backward scan
+(``repro.core.reversible.fused_stack_backward``), and lets it die with the
+scan iteration.  Peak grad memory is one layer's slice plus the small
+non-stack remainder (embed / norms / LM head / shared), never the model.
+
+Phases per step (n_micro == 1):
+
+  prelude   — ``jax.vjp`` over the non-stack prefix (embed, shared tree,
+              encoder for encdec): produces the stream inputs + a vjp
+              closure for later.
+  walk fwd  — gradient-free forward over the main stacks
+              (``fused_stack_forward``), saving per-layer inputs only for
+              non-reversible policy segments.
+  tail      — ``jax.vjp`` over final-norm + LM head + CE
+              (``model.loss_from_streams``): loss, tail grads, and the
+              output-stream cotangents that seed the walk.
+  probe     — (only when the optimizer clips) a backward walk whose
+              consumer reduces each layer's grads to a squared-norm
+              scalar: global norm with deferred scale, the two-pass
+              clipping strategy LOMO uses (arXiv:2306.09782).
+  update    — backward walk whose consumer applies
+              ``optimizer.update_leaf`` per layer; the stacked params and
+              optimizer state ride the scan CARRY and each layer's result
+              lands in place (``write_layer``), so donation keeps the
+              update in the parameters' own buffers — no old+new double
+              buffer (DESIGN.md §13).
+
+Under grad accumulation the per-microbatch walk's consumer adds raw grad
+sums into a layer-sliced accumulator in place (instead of a whole-tree
+f32 clone), and the update phase is a per-layer fori_loop over
+(params, acc, state) with no model recompute, averaging one layer slice
+at a time.
+
+Parity: identical math to the unfused step (same clip expression, same
+update-leaf ordering, the optimizer's ``update`` delegates to the same
+``update_leaf``) — tests gate max|Δparams| ≤ 1e-6 at f32 for
+n_micro ∈ {1, 4}.  Non-finite global norms skip the update (params AND
+moments frozen) instead of writing NaN everywhere; the driver counts such
+steps via the ``train.nonfinite_grad_steps`` counter.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reversible import (accumulate_shared, fused_stack_backward,
+                                   fused_stack_forward, read_layer,
+                                   shared_cotangent, write_layer,
+                                   zero_shared)
+from repro.optim.adamw import apply_subtree, clip_guard, global_norm_sq
+
+TAIL_KEYS = ("final_norm", "lm_head")
+
+
+def split_like(tree, main_names):
+    """Split a params-shaped tree into (pre, main, tail): the main stacks'
+    stacked subtrees by name, the tail (final norm + LM head), and
+    everything else (embed, shared, encoder stacks, enc_norm...).  Works on
+    any tree mirroring the params structure down to these keys — masks,
+    optimizer-state components, accumulators."""
+    stacks = tree["stacks"]
+    main = {n: stacks[n] for n in main_names}
+    other = {n: v for n, v in stacks.items() if n not in main_names}
+    pre = {k: v for k, v in tree.items()
+           if k != "stacks" and k not in TAIL_KEYS}
+    if other:
+        pre["stacks"] = other
+    tail = {k: tree[k] for k in TAIL_KEYS}
+    return pre, main, tail
+
+
+def merge_like(pre, main, tail):
+    """Inverse of ``split_like``."""
+    out = {k: v for k, v in pre.items() if k != "stacks"}
+    stacks = dict(pre.get("stacks", {}))
+    stacks.update(main)
+    out["stacks"] = stacks
+    out.update(tail)
+    return out
+
+
+def _stack_policies(model, save_memory):
+    mains = [s for s in model.stacks if s.role == "main"]
+    if isinstance(save_memory, (list, tuple)):
+        pl = list(save_memory)
+        n_main = sum(s.n for s in mains)
+        if len(pl) != n_main:
+            raise ValueError(
+                f"plan has {len(pl)} policies for {n_main} main units")
+        per = []
+        for s in mains:
+            per.append([str(p) for p in pl[:s.n]])
+            pl = pl[s.n:]
+        return mains, per
+    if save_memory is True:
+        return mains, [["reversible"] * s.n for s in mains]
+    raise ValueError(
+        f"fused optimizer needs save_memory=True or a per-layer policy "
+        f"list, got {save_memory!r}: 'half'/False have no per-layer "
+        f"backward walk to fuse updates into")
+
+
+def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
+                          mask_fn: Optional[Callable] = None,
+                          save_memory=True, accum_dtype=jnp.float32):
+    """Same signature/returns as ``trainer.make_train_step``:
+    step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    cfg = model.cfg
+    if not cfg.reversible:
+        raise ValueError(
+            f"--fused-optimizer requires a reversible config (the update "
+            f"hook lives in the reversible backward walk); {cfg.name} has "
+            f"reversible=False — use the standard step")
+    for attr in ("update_leaf", "per_param_trees", "build_state"):
+        if not hasattr(optimizer, attr):
+            raise ValueError(
+                f"{type(optimizer).__name__} does not expose the layer-wise "
+                f"update API ({attr}); fused training supports AdamW and "
+                f"LoMo")
+    if type(optimizer).__name__.lower() == "galore":
+        raise ValueError(
+            "GaLore cannot be fused: its projectors are fit to the "
+            "layer-stacked gradient matrices, so per-layer updates would "
+            "optimize in a different low-rank subspace than the unfused "
+            "step; use --optimizer adamw or lomo with --fused-optimizer")
+    from repro.train.trainer import validate_ep
+    validate_ep(cfg)
+
+    mains, policies = _stack_policies(model, save_memory)
+    main_names = [s.name for s in mains]
+    clip = float(getattr(optimizer, "clip_norm", 0.0) or 0.0)
+
+    def forward(pre_p, main_p, mbatch):
+        tokens = mbatch["tokens"]
+        bx = {k: v for k, v in mbatch.items() if k in ("enc_feats", "img")}
+
+        def prelude(pre_):
+            full = merge_like(pre_, main_p, {})
+            x1, x2, ctx, shared = model.audit_streams(full, tokens,
+                                                      bx or None)
+            return (x1, x2, shared), ctx
+
+        (x1, x2, shared), pre_vjp, ctx = jax.vjp(prelude, pre_p,
+                                                 has_aux=True)
+        y1, y2 = x1, x2
+        saves_all = []
+        for s, pol in zip(mains, policies):
+            runf = fused_stack_forward(s.fwd, pol)
+            (y1, y2), saves = runf(main_p[s.name], shared, ctx, y1, y2)
+            saves_all.append(saves)
+        return (y1, y2), saves_all, shared, ctx, pre_vjp
+
+    def backward(main_p, extras_by_stack, saves_all, shared, ctx,
+                 y1, y2, ct1, ct2, consume_factory):
+        """Reverse over the main stacks; returns the (in-place updated)
+        per-stack params/extras + per-stack stat scalars, the prelude
+        stream cotangents, and the shared-tree cotangent."""
+        csh_total = zero_shared(shared)
+        new_p, new_ex, stats = {}, {}, {}
+        c1, c2 = ct1, ct2
+        for k in range(len(mains) - 1, -1, -1):
+            s = mains[k]
+            runb = fused_stack_backward(s.fwd, s.inv, policies[k],
+                                        consume_factory(s.name))
+            ex = (None if extras_by_stack is None
+                  else extras_by_stack[s.name])
+            (new_p[s.name], new_ex[s.name], stats[s.name]), (y1, y2), \
+                (c1, c2), csh = runb(main_p[s.name], ex, saves_all[k],
+                                     shared, ctx, y1, y2, c1, c2)
+            csh_total = accumulate_shared(csh_total, csh)
+        return (new_p, new_ex, stats), (c1, c2), csh_total
+
+    def run_micro(pre_p, main_p, tail_p, mbatch):
+        """Forward + tail vjp for one microbatch."""
+        (y1, y2), saves_all, shared, ctx, pre_vjp = forward(
+            pre_p, main_p, mbatch)
+        loss, tvjp = jax.vjp(
+            lambda t, a, b: model.loss_from_streams(t, a, b, mbatch),
+            tail_p, y1, y2)
+        dtail, ct1, ct2 = tvjp(jnp.ones((), loss.dtype))
+        return (loss, saves_all, shared, ctx, pre_vjp, dtail,
+                (y1, y2), (ct1, ct2))
+
+    def step(params, opt_state, batch):
+        mask = mask_fn(params) if mask_fn else None
+        pre_p, main_p, tail_p = split_like(params, main_names)
+        if mask is not None:
+            pre_mk, main_mk, tail_mk = split_like(mask, main_names)
+        else:
+            pre_mk = tail_mk = None
+            main_mk = {}
+        parts = optimizer.per_param_trees(opt_state)
+        comp = {c: split_like(t, main_names) for c, t in parts.items()}
+        pre_st = {c: v[0] for c, v in comp.items()}
+        main_st = {n: {c: comp[c][1][n] for c in parts} for n in main_names}
+        tail_st = {c: v[2] for c, v in comp.items()}
+        step_no = opt_state["step"] + 1
+
+        def upd_factory(scale, skip):
+            def for_stack(name):
+                mk = main_mk.get(name)
+
+                def consume(i, lp, dlp, ex):
+                    new_lp, new_st = apply_subtree(
+                        optimizer, lp, dlp, ex, step=step_no, scale=scale,
+                        mask=mk, skip=skip)
+                    return new_lp, new_st, global_norm_sq(dlp)
+                return consume
+            return for_stack
+
+        def finish(new_main, new_main_st, dpre, dtail, scale, skip):
+            new_pre, new_pre_st = apply_subtree(
+                optimizer, pre_p, dpre, pre_st, step=step_no, scale=scale,
+                mask=pre_mk, skip=skip)
+            new_tail, new_tail_st = apply_subtree(
+                optimizer, tail_p, dtail, tail_st, step=step_no,
+                scale=scale, mask=tail_mk, skip=skip)
+            new_params = merge_like(new_pre, new_main, new_tail)
+            new_parts = {c: merge_like(
+                new_pre_st[c],
+                {n: new_main_st[n][c] for n in main_names},
+                new_tail_st[c]) for c in parts}
+            return new_params, optimizer.build_state(new_parts, step_no)
+
+        if n_micro == 1:
+            (loss, saves_all, shared, ctx, pre_vjp, dtail,
+             (y1, y2), (ct1, ct2)) = run_micro(pre_p, main_p, tail_p, batch)
+            if clip:
+                # probe walk: per-layer squared norms only — each layer's
+                # grad is reduced to a scalar and freed before the next
+                probe = lambda name: (          # noqa: E731
+                    lambda i, lp, dlp, ex: (None, None,
+                                            global_norm_sq(dlp)))
+                (_, _, sumsq), (d1, d2), csh = backward(
+                    main_p, None, saves_all, shared, ctx, y1, y2, ct1, ct2,
+                    probe)
+                (dpre,) = pre_vjp((d1, d2, shared_cotangent(csh, shared)))
+                total_sq = (global_norm_sq((dpre, dtail))
+                            + sum(sumsq.values()))
+                scale, skip = clip_guard(total_sq, clip)
+                (new_main, new_main_st, _), _, _ = backward(
+                    main_p, main_st, saves_all, shared, ctx, y1, y2,
+                    ct1, ct2, upd_factory(scale, skip))
+            else:
+                scale, skip = 1.0, None
+                (new_main, new_main_st, sumsq), (d1, d2), csh = backward(
+                    main_p, main_st, saves_all, shared, ctx, y1, y2,
+                    ct1, ct2, upd_factory(scale, skip))
+                (dpre,) = pre_vjp((d1, d2, shared_cotangent(csh, shared)))
+                total_sq = (global_norm_sq((dpre, dtail))
+                            + sum(sumsq.values()))
+        else:
+            gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            if gb % n_micro != 0:
+                raise ValueError(
+                    f"global batch {gb} is not divisible by "
+                    f"n_micro={n_micro} (remainder {gb % n_micro}); pick "
+                    f"n_micro dividing the global batch or pad the batch")
+            resh = jax.tree_util.tree_map(
+                lambda x: x.reshape(
+                    (n_micro, x.shape[0] // n_micro) + x.shape[1:]), batch)
+            zeros = lambda t: jax.tree_util.tree_map(   # noqa: E731
+                lambda p: jnp.zeros(p.shape, accum_dtype), t)
+            # accumulate RAW per-microbatch sums into the layer-sliced
+            # buffers (in-place dynamic-update-slice inside the walk);
+            # averaging happens per layer slice at update time, which is
+            # elementwise-identical to averaging the whole tree first
+            acc_factory = lambda name: (                # noqa: E731
+                lambda i, lp, dlp, ex: (None, jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), ex, dlp),
+                    jnp.zeros((), jnp.float32)))
+
+            def body(carry, mbatch):
+                acc_main, acc_pre, acc_tail, loss_sum = carry
+                (loss, saves_all, shared, ctx, pre_vjp, dtail,
+                 (y1, y2), (ct1, ct2)) = run_micro(pre_p, main_p, tail_p,
+                                                   mbatch)
+                (_, acc_main, _), (d1, d2), csh = backward(
+                    main_p, acc_main, saves_all, shared, ctx, y1, y2,
+                    ct1, ct2, acc_factory)
+                (dpre,) = pre_vjp((d1, d2, shared_cotangent(csh, shared)))
+                add = lambda a, g: a + g.astype(a.dtype)    # noqa: E731
+                acc_pre = jax.tree_util.tree_map(add, acc_pre, dpre)
+                acc_tail = jax.tree_util.tree_map(add, acc_tail, dtail)
+                return (acc_main, acc_pre, acc_tail, loss_sum + loss), None
+
+            init = ({n: zeros(main_p[n]) for n in main_names},
+                    zeros(pre_p), zeros(tail_p), 0.0)
+            (acc_main, acc_pre, acc_tail, loss_sum), _ = jax.lax.scan(
+                body, init, resh)
+            loss = loss_sum / n_micro
+            avg = lambda t: jax.tree_util.tree_map(     # noqa: E731
+                lambda a: a / n_micro, t)
+            dpre, dtail = avg(acc_pre), avg(acc_tail)
+            total_sq = (global_norm_sq((dpre, dtail))
+                        + global_norm_sq(acc_main) / (n_micro * n_micro))
+            scale, skip = (clip_guard(total_sq, clip) if clip
+                           else (1.0, None))
+            new_main, new_main_st = {}, {}
+            for n in main_names:
+                mk = main_mk.get(n)
+                acc_n = acc_main[n]
+                nl = jax.tree_util.tree_leaves(main_p[n])[0].shape[0]
+
+                def ubody(j, carry, mk=mk, acc_n=acc_n):
+                    pb, stb = carry
+                    g = jax.tree_util.tree_map(lambda a: a / n_micro,
+                                               read_layer(acc_n, j))
+                    new_lp, new_st = apply_subtree(
+                        optimizer, read_layer(pb, j), g,
+                        read_layer(stb, j), step=step_no, scale=scale,
+                        mask=mk, skip=skip)
+                    return (write_layer(pb, new_lp, j),
+                            write_layer(stb, new_st, j))
+                new_main[n], new_main_st[n] = jax.lax.fori_loop(
+                    0, nl, ubody, (main_p[n], main_st[n]))
+
+        new_params, new_opt = finish(new_main, new_main_st, dpre, dtail,
+                                     scale, skip)
+        gnorm = jnp.sqrt(total_sq)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "grads_finite": jnp.isfinite(gnorm),
+                   "step": new_opt["step"]}
+        return new_params, new_opt, metrics
+
+    return step

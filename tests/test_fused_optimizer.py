@@ -1,0 +1,141 @@
+"""Fused optimizer-in-backward step (repro.train.fused, DESIGN.md §13):
+parity with the unfused step at f32 under jit (AdamW/LoMo, with and without
+grad accumulation), composition with mixed activation policies, stage masks
+and shared-parameter families, and the actionable rejections (GaLore,
+non-reversible configs, 'half', compression).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import schedule
+from repro.data.pipeline import DataConfig, packed_batches
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.optim.galore import GaLore
+from repro.optim.lomo import LoMo
+from repro.train.trainer import make_train_step
+
+PARITY_TOL = 1e-6          # ISSUE acceptance gate: f32, same seed, jitted
+
+
+def _setup(arch="qwen2-moe-a2.7b", seq=64, batch=4, n_batches=3):
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                    global_batch=batch)
+    it = packed_batches(dc)
+    return model, params, [next(it) for _ in range(n_batches)]
+
+
+def _run(model, params, batches, opt, *, fused, n_micro=1, mask_fn=None,
+         save_memory=True):
+    st = opt.init(params)
+    step = jax.jit(make_train_step(model, opt, n_micro=n_micro,
+                                   mask_fn=mask_fn, save_memory=save_memory,
+                                   fused=fused))
+    metrics = None
+    for b in batches:
+        params, st, metrics = step(params, st, b)
+    return params, st, metrics
+
+
+def _max_abs_diff(a, b):
+    d = jax.tree_util.tree_map(
+        lambda x, y: jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))), a, b)
+    return float(jax.tree_util.tree_reduce(jnp.maximum, d, jnp.zeros(())))
+
+
+def _parity(model, params, batches, opt, **kw):
+    pu, su, mu = _run(model, params, batches, opt, fused=False, **kw)
+    pf, sf, mf = _run(model, params, batches, opt, fused=True, **kw)
+    assert _max_abs_diff(pu, pf) <= PARITY_TOL
+    # optimizer state keeps the exact unfused layout (checkpoint compatible):
+    # same treedef, and the values match
+    assert (jax.tree_util.tree_structure(su)
+            == jax.tree_util.tree_structure(sf))
+    assert _max_abs_diff(su, sf) <= 1e-5
+    np.testing.assert_allclose(float(mu["grad_norm"]), float(mf["grad_norm"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(mu["loss"]), float(mf["loss"]),
+                               rtol=1e-5)
+    assert int(mf["step"]) == len(batches)
+
+
+@pytest.mark.parametrize("n_micro", [1, 4])
+def test_fused_adamw_parity(n_micro):
+    model, params, batches = _setup()
+    _parity(model, params, batches, AdamW(lr=1e-4, weight_decay=0.01),
+            n_micro=n_micro)
+
+
+@pytest.mark.parametrize("n_micro", [1, 4])
+def test_fused_lomo_parity(n_micro):
+    model, params, batches = _setup()
+    _parity(model, params, batches, LoMo(lr=1e-3), n_micro=n_micro)
+
+
+def test_fused_mixed_policy_parity():
+    """The fused walk composes with planner policy lists: saved-input
+    segments (store/remat/offload) and reversible segments in one stack."""
+    model, params, batches = _setup(n_batches=2)
+    n = sum(s.n for s in model.stacks if s.role == "main")
+    policies = (["store", "reversible", "remat", "offload"] * n)[:n]
+    _parity(model, params, batches, LoMo(lr=1e-3), save_memory=policies)
+
+
+def test_fused_stage1_mask_parity():
+    """Stage-1 adapter mask: frozen leaves stay bitwise-identical and the
+    fused step matches the unfused masked update."""
+    model, params, batches = _setup(n_batches=2)
+    pu, _, _ = _run(model, params, batches, AdamW(lr=1e-4), fused=False,
+                    mask_fn=schedule.stage1_mask)
+    pf, _, _ = _run(model, params, batches, AdamW(lr=1e-4), fused=True,
+                    mask_fn=schedule.stage1_mask)
+    assert _max_abs_diff(pu, pf) <= PARITY_TOL
+    mask = schedule.stage1_mask(params)
+    frozen = jax.tree_util.tree_map(
+        lambda m, p0, p1: bool(m == 0.0) and not np.array_equal(p0, p1),
+        mask, params, pf)
+    assert not any(jax.tree_util.tree_leaves(frozen))
+
+
+def test_fused_shared_params_family():
+    """zamba2 routes a shared block from the non-stack prefix through every
+    layer: the fused prelude vjp must accumulate the shared-tree cotangents
+    from the per-layer walk."""
+    model, params, batches = _setup(arch="zamba2-7b", n_batches=2)
+    _parity(model, params, batches, LoMo(lr=1e-3))
+
+
+def test_fused_rejects_galore():
+    model, params, _ = _setup(n_batches=0)
+    with pytest.raises(ValueError, match="GaLore cannot be fused"):
+        make_train_step(model, GaLore(lr=1e-3), fused=True)
+
+
+def test_fused_rejects_non_reversible_config():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        reversible=False, remat_policy="block")
+    with pytest.raises(ValueError, match="requires a reversible config"):
+        make_train_step(Model(cfg), AdamW(lr=1e-4), fused=True)
+
+
+def test_fused_rejects_half_save_memory():
+    model, _, _ = _setup(n_batches=0)
+    with pytest.raises(ValueError, match="per-layer policy"):
+        make_train_step(model, AdamW(lr=1e-4), fused=True,
+                        save_memory="half")
+
+
+def test_fused_rejects_compression():
+    from repro.optim.compression import quantize_dequantize
+    model, _, _ = _setup(n_batches=0)
+    compress = lambda g: jax.tree_util.tree_map(quantize_dequantize, g)
+    with pytest.raises(ValueError, match="compression"):
+        make_train_step(model, AdamW(lr=1e-4), fused=True,
+                        compress=compress)

@@ -1,15 +1,20 @@
-"""Optimizers: AdamW, GaLore (low-rank state), LoMo (zero state), compression
-with error feedback, two-stage masks end-to-end.
+"""Optimizers: AdamW, GaLore (low-rank state), LoMo (zero state + f32
+masters for sub-f32 params), compression with error feedback, two-stage
+masks, non-finite-gradient skip, accumulator dtype policy, and optimizer
+state through checkpoint save/restore.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.checkpoint import manager as ckpt
 from repro.optim.adamw import AdamW, cosine_schedule, global_norm
 from repro.optim.compression import (compress_with_feedback, init_error_state,
                                      quantize_dequantize)
 from repro.optim.galore import GaLore, state_bytes
 from repro.optim.lomo import LoMo
+from repro.train.trainer import accumulator_init
 
 
 def _quadratic_problem():
@@ -106,3 +111,107 @@ def test_cosine_schedule_shape():
 def test_global_norm():
     t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
     assert abs(float(global_norm(t)) - 5.0) < 1e-6
+
+
+def test_lomo_bf16_master_accumulates_small_steps():
+    """Regression: updating a bf16 weight in place loses any step below
+    ~2^-8 of the weight — at lr=1e-4 with unit grads the param froze at its
+    initial value.  The f32 master must accumulate the exact iterate."""
+    opt = LoMo(lr=1e-4, clip_norm=0.0)
+    p = {"w": jnp.ones((8,), jnp.bfloat16)}
+    st = opt.init(p)
+    assert st["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((8,), jnp.bfloat16)}
+    for _ in range(300):
+        p, st = opt.update(g, st, p)
+    # master carries 1 - 300*1e-4 = 0.97 exactly; the bf16 shadow follows
+    np.testing.assert_allclose(np.asarray(st["master"]["w"]), 0.97,
+                               rtol=1e-5)
+    # the naive in-place bf16 update stays frozen at exactly 1.0
+    assert float(p["w"][0]) < 0.99
+    assert p["w"].dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("opt", [AdamW(lr=1e-1, clip_norm=1.0),
+                                 LoMo(lr=1e-1, clip_norm=1.0)],
+                         ids=["adamw", "lomo"])
+def test_nonfinite_grads_skip_update(opt):
+    """An Inf/NaN anywhere in the grads must freeze the step (params AND
+    moments) instead of writing NaN into every parameter; the step counter
+    still advances so schedules stay aligned."""
+    loss, p = _quadratic_problem()
+    st = opt.init(p)
+    g = jax.grad(loss)(p)
+    g["w"] = g["w"].at[0, 0].set(jnp.inf)
+    p2, st2 = opt.update(g, st, p)
+    assert int(st2["step"]) == 1
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(st2)):
+        if np.asarray(a).dtype.kind != "i":     # step counter moved
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a finite gradient step from the skipped state still descends
+    p3, _ = opt.update(jax.grad(loss)(p2), st2, p2)
+    assert float(loss(p3)) < float(loss(p2))
+
+
+def test_accumulator_dtype_policy():
+    """Explicit accum_dtype wins; else the compressor's output dtype per
+    leaf; else f32 (exact cross-microbatch sums by default)."""
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16),
+              "b": jnp.ones((4,), jnp.float32)}
+    acc = accumulator_init(params)
+    assert all(a.dtype == jnp.float32
+               for a in jax.tree_util.tree_leaves(acc))
+    compress = lambda t: jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16), t)
+    acc = accumulator_init(params, compress=compress)
+    assert all(a.dtype == jnp.bfloat16
+               for a in jax.tree_util.tree_leaves(acc))
+    acc = accumulator_init(params, compress=compress,
+                           accum_dtype=jnp.float16)
+    assert all(a.dtype == jnp.float16
+               for a in jax.tree_util.tree_leaves(acc))
+
+
+@pytest.mark.parametrize("make_opt", [lambda: AdamW(lr=5e-2),
+                                      lambda: GaLore(lr=3e-2, rank=2),
+                                      lambda: LoMo(lr=0.2)],
+                         ids=["adamw", "galore", "lomo"])
+def test_opt_state_checkpoint_roundtrip(make_opt, tmp_path):
+    """(params, opt_state) survives save -> restore bit-for-bit for every
+    optimizer state layout (m/v moments, low-rank projector leaves, f32
+    masters/zero state)."""
+    opt = make_opt()
+    p = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 4)),
+         "b": jnp.zeros((4,), jnp.bfloat16)}
+    st = opt.init(p)
+    for _ in range(3):
+        g = jax.tree_util.tree_map(jnp.ones_like, p)
+        p, st = opt.update(g, st, p)
+    ckpt.save(str(tmp_path), 3, (p, st))
+    (p2, st2), step = ckpt.restore(str(tmp_path), (p, st))
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves((p, st)),
+                    jax.tree_util.tree_leaves((p2, st2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_restore_rejects_optimizer_state_mismatch(tmp_path):
+    """Restoring an AdamW checkpoint into a LoMo-shaped tree must fail with
+    an error naming both leaf counts and the likely cause, not an opaque
+    KeyError from the npz archive."""
+    p = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    adamw, lomo = AdamW(lr=1e-2), LoMo(lr=1e-2)
+    ckpt.save(str(tmp_path), 1, (p, adamw.init(p)))
+    with pytest.raises(ValueError, match="optimizer"):
+        ckpt.restore(str(tmp_path), (p, lomo.init(p)))
+
+
+def test_ckpt_restore_rejects_shape_mismatch(tmp_path):
+    p = {"w": jnp.ones((4, 4))}
+    ckpt.save(str(tmp_path), 1, p)
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), {"w": jnp.ones((8, 4))})
