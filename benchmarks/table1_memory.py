@@ -144,6 +144,41 @@ def measure_fused_peak(B=4, S=256):
     return rows
 
 
+def measure_lean(B=4, S=256, groups=2, rank=16):
+    """Lean layer-group leg (DESIGN.md §14): grouped params AND optimizer
+    state must land STRICTLY below the ungrouped layout on the same config,
+    and the grouped config must actually take a fused optimizer step
+    (finite loss — the per-layer delta/per updates plus once-per-group base
+    updates all execute).  Gate: ``ok`` on the single row."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layers=4, dtype="float32")
+    lean_cfg = cfg.replace(num_layer_groups=groups, delta_rank=rank)
+    from repro.memory.estimator import array_bytes
+    opt = AdamW(lr=1e-4)
+
+    def bytes_of(c):
+        m = Model(c)
+        ap = m.abstract_params()
+        return m, array_bytes(ap), array_bytes(jax.eval_shape(opt.init, ap))
+
+    _, fpb, fob = bytes_of(cfg)
+    lm, lpb, lob = bytes_of(lean_cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S),
+                                          0, cfg.vocab_size)}
+    step = jax.jit(make_train_step(lm, opt, fused=True),
+                   donate_argnums=(0, 1))
+    _, _, m = step(params, opt.init(params), batch)
+    loss = float(m["loss"])
+    return {"method": "lean", "groups": groups, "delta_rank": rank,
+            "grouped_param_bytes": int(lpb), "flat_param_bytes": int(fpb),
+            "grouped_opt_bytes": int(lob), "flat_opt_bytes": int(fob),
+            "params_plus_opt_reduction_x": (fpb + fob) / (lpb + lob),
+            "fused_step_loss": loss,
+            "ok": bool(lpb < fpb and lob < fob
+                       and jnp.isfinite(jnp.asarray(loss)))}
+
+
 def validate_estimator(B=4, S=256, tol=0.10):
     """Cross-check repro.memory.estimator's static predictions against the
     measured quantities of this benchmark: per-policy residual bytes must
@@ -186,7 +221,28 @@ def main():
     ap.add_argument("--fused-only", action="store_true",
                     help="measure only the fused-vs-unfused compiled peak "
                          "comparison (fast; the CI fused-optimizer gate)")
+    ap.add_argument("--lean", action="store_true",
+                    help="measure only the lean layer-group leg (DESIGN.md "
+                         "§14): grouped params+opt bytes strictly below the "
+                         "ungrouped layout + one grouped fused step")
     args = ap.parse_args()
+
+    if args.lean:
+        lr = measure_lean()
+        print("lean layer-groups (grouped vs flat, params + opt bytes):")
+        print(f"  params {lr['grouped_param_bytes'] / 2**20:8.1f} MiB vs "
+              f"{lr['flat_param_bytes'] / 2**20:8.1f} MiB   opt "
+              f"{lr['grouped_opt_bytes'] / 2**20:8.1f} MiB vs "
+              f"{lr['flat_opt_bytes'] / 2**20:8.1f} MiB   "
+              f"(x{lr['params_plus_opt_reduction_x']:.2f} smaller)  "
+              f"fused-step loss {lr['fused_step_loss']:.4f}  "
+              f"{'OK' if lr['ok'] else 'NOT BELOW UNGROUPED'}")
+        obs.write_bench_json(args.out, "table1_lean", {
+            "lean": lr,
+            "gates": {"lean_regressions": 0 if lr["ok"] else 1},
+        }, config="qwen2-moe-a2.7b")
+        print(f"wrote {args.out}")
+        return 0 if lr["ok"] else 1
 
     print("fused optimizer peak (compiled temp bytes, fused vs unfused):")
     bad = 0

@@ -102,8 +102,16 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
-            process_index: int = 0) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (a pytree of arrays/SDS)."""
+            process_index: int = 0,
+            layouts: Optional[dict] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays/SDS).
+
+    ``layouts`` is the current model's layer-group tie map per grouped
+    stack ({stack: GroupLayout.describe()}, see DESIGN.md §14); when either
+    side declares one, it must match what the checkpoint was saved with —
+    a base leaf only means "weights of group g" under the same layer→group
+    map, so a silent structural reinterpretation would be wrong even when
+    leaf counts happen to line up."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -112,6 +120,18 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     data = np.load(os.path.join(d, f"proc{process_index}.npz"))
     with open(os.path.join(d, "META.json")) as f:
         meta = json.load(f)
+    saved_lay = {k: v for k, v in (meta.get("layouts") or {}).items()
+                 if v is not None}
+    cur_lay = {k: v for k, v in (layouts or {}).items() if v is not None}
+    if (layouts is not None or meta.get("layouts") is not None) \
+            and saved_lay != cur_lay:
+        raise ValueError(
+            f"checkpoint {d} was saved under layer→group map {saved_lay} "
+            f"but the restore target declares {cur_lay}: a lean checkpoint "
+            f"is only valid under the exact group_map/grouped_keys/"
+            f"delta_rank it was trained with (ModelConfig.num_layer_groups"
+            f"/delta_rank, DESIGN.md §14) — restore with the matching "
+            f"config, or restart from scratch.")
     dtypes = meta.get("dtypes")
     flat, treedef = _flatten(like)
     n_saved = meta.get("n_leaves", len(flat))
@@ -123,7 +143,9 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             f"likely saved under a different optimizer (AdamW carries m/v "
             f"moments, GaLore low-rank projector leaves, LOMO f32 masters "
             f"for sub-f32 params only) — restore with the optimizer the "
-            f"checkpoint was written with, or restart from scratch.")
+            f"checkpoint was written with, or restart from scratch.  A "
+            f"changed num_layer_groups/delta_rank also restructures the "
+            f"tree (lean layout, DESIGN.md §14).")
     leaves = []
     for i, x in enumerate(flat):
         arr = data[f"a{i}"]

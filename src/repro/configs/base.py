@@ -76,6 +76,16 @@ class ModelConfig:
     inverse_fp_iters: int = 3      # paper uses 1; 3 reaches fp32 eps (see DESIGN.md)
     adapter_dim: Optional[int] = None  # d for P_up/P_down; None -> d_model
 
+    # lean parameterization (DESIGN.md §14): ALBERT-style layer-group
+    # weight sharing — params AND optimizer state shrink by the sharing
+    # factor, multiplicative with reversibility.  0 disables (flat layout).
+    num_layer_groups: int = 0      # groups per main stack (must divide the
+                                   # stack depth; requires reversible=True)
+    delta_rank: int = 0            # per-layer low-rank A·B delta added to
+                                   # every shared matrix (B zero-init, so
+                                   # deltas start as exact no-ops); 0 = pure
+                                   # sharing
+
     # memory planning (src/repro/memory): per-device HBM budget the planner
     # fits the per-layer activation policies into.  None -> planner/CLI default.
     hbm_budget_gb: Optional[float] = None
@@ -199,4 +209,9 @@ def reduce_config(cfg: ModelConfig) -> ModelConfig:
         kw.update(sliding_window=64)
     if cfg.local_global:
         kw.update(local_window=32)
+    if cfg.num_layer_groups:
+        # keep the layout valid at the reduced depth: groups must divide it
+        import math
+        kw.update(num_layer_groups=math.gcd(kw["num_layers"],
+                                            cfg.num_layer_groups))
     return cfg.replace(**kw)

@@ -495,6 +495,298 @@ def fused_stack_backward(block_fwd: Callable, block_inv: Callable, policies,
     return run
 
 
+# ----------------------------------------------- layer-group (lean) walks
+#
+# Grouped stacks (models.spec.GroupLayout, DESIGN.md §14) replace the flat
+# "leading axis = n_layers" param layout with {"base" (one slice per
+# group), "delta" (per-layer low-rank), "per" (non-shared keys)}.  The
+# walks below mirror their flat counterparts, but the param tree can no
+# longer ride the scan xs (its leading dims are G and L, not the scanned
+# range) — instead it is closed over / carried, and each layer's effective
+# unit weights are materialised inside the body via ``read_unit``.  For
+# paths that rely on standard autodiff (plain scan, store/remat/offload
+# policies) that is the whole story: the base gather differentiates to a
+# scatter-add automatically.  The reversible custom_vjp and the fused walk
+# accumulate manually: delta/per cotangents land in their own layer slice
+# (``write_layer``), base cotangents scatter-add into the group slice
+# (``.at[g].add``) so each shared matrix's gradient is the sum over its
+# layers — and the fused optimizer updates it exactly ONCE per group.
+
+
+def read_unit(layout, gp, i):
+    """Effective unit-param tree of (stack-local) layer ``i`` of a grouped
+    stack: base[group_map[i]] + delta[i], merged with per[i].  ``i`` may be
+    traced (gather through the group map)."""
+    from repro.models.spec import materialize_unit
+    g = jnp.take(jnp.asarray(layout.group_map, jnp.int32), i)
+    return materialize_unit(read_layer(gp["base"], g),
+                            read_layer(gp["delta"], i),
+                            read_layer(gp["per"], i))
+
+
+def _grouped_vjp(block_fwd, layout, gp, shared, ctx, i, x1, x2, cts):
+    """Per-layer vjp of a grouped block w.r.t. its (base, delta, per)
+    slices — materialisation happens INSIDE the differentiated function so
+    delta grads are per layer while the base slice's grad is exactly this
+    layer's contribution (summed into the group accumulator by callers)."""
+    from repro.models.spec import materialize_unit
+    g = jnp.take(jnp.asarray(layout.group_map, jnp.int32), i)
+    b_sl = read_layer(gp["base"], g)
+    d_sl = read_layer(gp["delta"], i)
+    p_sl = read_layer(gp["per"], i)
+
+    def f(b_, d_, p_, sh_, a, b):
+        return block_fwd(materialize_unit(b_, d_, p_), sh_, ctx, i, a, b)
+
+    _, vjp = jax.vjp(f, b_sl, d_sl, p_sl, shared, x1, x2)
+    db, dd, dp, dsh, d1, d2 = vjp(cts)
+    return g, (b_sl, d_sl, p_sl), (db, dd, dp), dsh, (d1, d2)
+
+
+def _scatter_base(acc, g, db):
+    return jax.tree_util.tree_map(
+        lambda A, u: A.at[g].add(u.astype(A.dtype)), acc, db)
+
+
+def _zeros_grouped(gp):
+    return jax.tree_util.tree_map(lambda a: jnp.zeros_like(a), gp)
+
+
+def grouped_reversible_stack(block_fwd: Callable, block_inv: Callable,
+                             layout, save_memory=True, start: int = 0,
+                             end: int = None):
+    """Grouped analogue of ``reversible_stack`` over layers [start, end).
+
+    apply(gp, shared, ctx, x1, x2) -> (y1, y2) with
+    gp = {"base", "delta", "per"}.  The whole grouped tree is passed (never
+    sliced per segment): the custom_vjp's backward returns a full
+    grouped-shaped cotangent, so segment applications compose by JAX's own
+    cotangent summation.  ``save_memory="half"`` is not supported for
+    grouped stacks (callers fall back to full inversion).
+    """
+    from repro.core import settings
+    if end is None:
+        end = layout.n_layers
+    idxs = jnp.arange(start, end, dtype=jnp.int32)
+    assert save_memory in (True, False), \
+        "grouped stacks support save_memory True/False (no 'half')"
+
+    def plain(gp, shared, ctx, x1, x2):
+        def body(carry, i):
+            lp = read_unit(layout, gp, i)
+            return block_fwd(lp, shared, ctx, i, *carry), None
+        (y1, y2), _ = jax.lax.scan(body, (x1, x2), idxs,
+                                   unroll=settings.SCAN_UNROLL)
+        return y1, y2
+
+    if save_memory is False:
+        return plain
+
+    @jax.custom_vjp
+    def apply(gp, shared, ctx, x1, x2):
+        return plain(gp, shared, ctx, x1, x2)
+
+    def fwd_rule(gp, shared, ctx, x1, x2):
+        y1, y2 = plain(gp, shared, ctx, x1, x2)
+        return (y1, y2), (gp, shared, ctx, y1, y2)
+
+    def bwd_rule(res, cts):
+        gp, shared, ctx, y1, y2 = res
+        ct1, ct2 = cts
+
+        def body(carry, i):
+            cy1, cy2, c1, c2, dgp, csh = carry
+            lp = read_unit(layout, gp, i)
+            x1, x2 = block_inv(lp, shared, ctx, i, cy1, cy2)
+            x1 = jax.lax.stop_gradient(x1)
+            x2 = jax.lax.stop_gradient(x2)
+            g, _, (db, dd, dp), dsh, (d1, d2) = _grouped_vjp(
+                block_fwd, layout, gp, shared, ctx, i, x1, x2, (c1, c2))
+            dgp = {"base": _scatter_base(dgp["base"], g, db),
+                   "delta": write_layer(dgp["delta"], dd, i),
+                   "per": write_layer(dgp["per"], dp, i)}
+            return (x1, x2, d1, d2, dgp, accumulate_shared(csh, dsh)), None
+
+        from repro.core import settings as _s
+        init = (y1, y2, ct1, ct2, _zeros_grouped(gp), zero_shared(shared))
+        (_, _, d1, d2, dgp, dsh), _ = jax.lax.scan(
+            body, init, idxs, reverse=True, unroll=_s.SCAN_UNROLL)
+        return (dgp, shared_cotangent(dsh, shared),
+                _zeros_tangent(ctx), d1, d2)
+
+    apply.defvjp(fwd_rule, bwd_rule)
+    return apply
+
+
+def grouped_mixed_policy_stack(block_fwd: Callable, block_inv: Callable,
+                               layout, policies):
+    """Grouped analogue of ``mixed_policy_stack``.  Non-reversible segments
+    read units inline and lean on standard autodiff (the base gather's
+    cotangent is a scatter-add); reversible segments go through the grouped
+    custom_vjp above.  Cotangents from multiple segments touching the same
+    group sum via JAX's multi-use accumulation of ``gp``."""
+    from repro.core import settings
+    n_layers = len(policies)
+    assert n_layers == layout.n_layers, (n_layers, layout.n_layers)
+    segs = policy_segments(policies)
+    if any(p == "reversible" for p in policies):
+        assert block_inv is not None, "reversible policy needs block_inv"
+
+    def apply(gp, shared, ctx, x1, x2):
+        from repro.memory.offload import offload_block
+        for start, end, pol in segs:
+            n = end - start
+            if pol == "reversible":
+                f = grouped_reversible_stack(block_fwd, block_inv, layout,
+                                             save_memory=True,
+                                             start=start, end=end)
+                x1, x2 = f(gp, shared, ctx, x1, x2)
+            elif pol in ("store", "remat"):
+                def unit_fwd(gp_, sh, ctx_, i, a, b):
+                    return block_fwd(read_unit(layout, gp_, i), sh, ctx_,
+                                     i, a, b)
+                body_fn = unit_fwd
+                if pol == "remat":
+                    # rematerialise the effective weights too: only the
+                    # segment's stream inputs persist
+                    body_fn = jax.checkpoint(unit_fwd)
+                idxs = jnp.arange(start, end, dtype=jnp.int32)
+
+                def body(carry, i, fn=body_fn):
+                    return fn(gp, shared, ctx, i, *carry), None
+                (x1, x2), _ = jax.lax.scan(body, (x1, x2), idxs,
+                                           unroll=settings.SCAN_UNROLL)
+            else:                                       # offload
+                ob = offload_block(block_fwd)
+                for j in range(n):
+                    lp = read_unit(layout, gp, jnp.int32(start + j))
+                    x1, x2 = ob(lp, shared, ctx, jnp.int32(start + j),
+                                x1, x2)
+        return x1, x2
+
+    return apply
+
+
+def grouped_fused_stack_forward(block_fwd: Callable, layout, policies):
+    """Grouped analogue of ``fused_stack_forward`` (gradient-free)."""
+    from repro.core import settings
+    from repro.memory.offload import to_host
+    segs = policy_segments(policies)
+
+    def run(gp, shared, ctx, x1, x2):
+        saves = []
+        for start, end, pol in segs:
+            idxs = jnp.arange(start, end, dtype=jnp.int32)
+            if pol == "reversible":
+                def body(carry, i):
+                    lp = read_unit(layout, gp, i)
+                    return block_fwd(lp, shared, ctx, i, *carry), None
+                (x1, x2), _ = jax.lax.scan(body, (x1, x2), idxs,
+                                           unroll=settings.SCAN_UNROLL)
+                saves.append(None)
+            else:
+                def body(carry, i):
+                    a, b = carry
+                    lp = read_unit(layout, gp, i)
+                    return block_fwd(lp, shared, ctx, i, a, b), (a, b)
+                (x1, x2), ins = jax.lax.scan(body, (x1, x2), idxs,
+                                             unroll=settings.SCAN_UNROLL)
+                saves.append(to_host(ins) if pol == "offload" else ins)
+        return (x1, x2), saves
+
+    return run
+
+
+def grouped_fused_stack_backward(block_fwd: Callable, block_inv: Callable,
+                                 layout, policies, consume: Callable):
+    """Grouped analogue of ``fused_stack_backward``.
+
+    ``consume(i, lay_sl, dlay_sl, ex)`` sees only the PER-LAYER trainables
+    — ``lay_sl = {"delta": ..., "per": ...}`` slices — and updates them in
+    place exactly like the flat walk.  Base cotangents instead scatter-add
+    into ``acc_base`` (grouped shape, zeros-initialised here): the shared
+    slice's gradient is only complete once every layer of its group has
+    been walked, so the caller applies the base update exactly once per
+    group AFTER the walk (repro.train.fused's group loop).  ``acc_base``
+    is 1/sharing-factor the size of a flat gradient, so the fused memory
+    claim degrades only by the already-shrunk base tree.
+
+    Returns ``run(gp, extras, saves, shared, ctx, y1, y2, ct1, ct2) ->
+    ((gp, extras, stat, acc_base), (x1, x2), (d1, d2), csh)`` where
+    ``extras``/``stat`` cover the per-layer part only.
+    """
+    from repro.core import settings
+    from repro.memory.offload import to_device
+    segs = policy_segments(policies)
+
+    def run(gp, extras, saves, shared, ctx, y1, y2, ct1, ct2):
+        assert len(saves) == len(segs), \
+            f"saves/segment mismatch: {len(saves)} vs {len(segs)}"
+        csh = zero_shared(shared)
+        c1, c2 = ct1, ct2
+        stat = jnp.zeros((), jnp.float32)
+        acc_base = _zeros_grouped(gp["base"])
+
+        def layer_step(i, gp_, ext, acc_b, st_stat, csh_, x1, x2, cc1, cc2):
+            g, (_, d_sl, p_sl), (db, dd, dp), dsh, (d1, d2) = _grouped_vjp(
+                block_fwd, layout, gp_, shared, ctx, i, x1, x2, (cc1, cc2))
+            acc_b = _scatter_base(acc_b, g, db)
+            ex = None if ext is None else read_layer(ext, i)
+            new_lay, new_ex, s = consume(i, {"delta": d_sl, "per": p_sl},
+                                         {"delta": dd, "per": dp}, ex)
+            if new_lay is not None:
+                gp_ = {"base": gp_["base"],
+                       "delta": write_layer(gp_["delta"], new_lay["delta"],
+                                            i),
+                       "per": write_layer(gp_["per"], new_lay["per"], i)}
+            if new_ex is not None:
+                ext = write_layer(ext, new_ex, i)
+            return (gp_, ext, acc_b, st_stat + s,
+                    accumulate_shared(csh_, dsh), d1, d2)
+
+        for k in range(len(segs) - 1, -1, -1):
+            start, end, pol = segs[k]
+            idxs = jnp.arange(start, end, dtype=jnp.int32)
+            if pol == "reversible":
+                def body(carry, i):
+                    cy1, cy2, cc1, cc2, gp_, ext, acc_b, st_stat, csh_ = \
+                        carry
+                    lp = read_unit(layout, gp_, i)
+                    x1, x2 = block_inv(lp, shared, ctx, i, cy1, cy2)
+                    x1 = jax.lax.stop_gradient(x1)
+                    x2 = jax.lax.stop_gradient(x2)
+                    gp_, ext, acc_b, st_stat, csh_, d1, d2 = layer_step(
+                        i, gp_, ext, acc_b, st_stat, csh_, x1, x2, cc1, cc2)
+                    return (x1, x2, d1, d2, gp_, ext, acc_b, st_stat,
+                            csh_), None
+                (y1, y2, c1, c2, gp, extras, acc_base, stat, csh), _ = \
+                    jax.lax.scan(
+                        body, (y1, y2, c1, c2, gp, extras, acc_base, stat,
+                               csh),
+                        idxs, reverse=True, unroll=settings.SCAN_UNROLL)
+            else:
+                ins = saves[k]
+                assert ins is not None, f"segment {k} ({pol}) has no saves"
+                if pol == "offload":
+                    ins = to_device(ins)
+                x1s, x2s = ins
+
+                def body(carry, inp):
+                    i, a, b = inp
+                    cc1, cc2, gp_, ext, acc_b, st_stat, csh_ = carry
+                    gp_, ext, acc_b, st_stat, csh_, d1, d2 = layer_step(
+                        i, gp_, ext, acc_b, st_stat, csh_, a, b, cc1, cc2)
+                    return (d1, d2, gp_, ext, acc_b, st_stat, csh_), None
+                (c1, c2, gp, extras, acc_base, stat, csh), _ = jax.lax.scan(
+                    body, (c1, c2, gp, extras, acc_base, stat, csh),
+                    (idxs, x1s, x2s), reverse=True,
+                    unroll=settings.SCAN_UNROLL)
+                y1, y2 = x1s[0], x2s[0]
+        return (gp, extras, stat, acc_base), (y1, y2), (c1, c2), csh
+
+    return run
+
+
 # ------------------------------------------------------------ audit hooks
 #
 # The reversible audit mode (repro.obs.audit, DESIGN.md §12) re-walks a

@@ -39,6 +39,9 @@ RULES = {
     "stream": ("model",),
     "embed_out": ("model",),
     "layers": (),
+    "groups": (),   # lean layer-group dim (DESIGN.md §14): like "layers",
+                    # never sharded — ZeRO-3/TP/EP apply to the inner dims
+                    # of the deduplicated base leaves exactly as flat
     None: (),
 }
 

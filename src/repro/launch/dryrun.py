@@ -213,6 +213,14 @@ def plan_main(argv):
                          "non-stack remainder + one layer slice; adamw/lomo")
     ap.add_argument("--reduced", action="store_true",
                     help="plan the smoke-scale configs (CPU tests)")
+    ap.add_argument("--layer-groups", type=int, default=0,
+                    help="lean parameterization (DESIGN.md §14): share each "
+                         "main-stack layer's big matrices across N layer "
+                         "groups — params AND optimizer state shrink by the "
+                         "sharing factor; the report adds the factor line")
+    ap.add_argument("--delta-rank", type=int, default=0,
+                    help="per-layer low-rank delta rank on the shared "
+                         "matrices (0 = pure sharing); needs --layer-groups")
     ap.add_argument("--moe-backend", default=None,
                     choices=["einsum", "grouped"],
                     help="override ModelConfig.moe_backend for the plan "
@@ -238,6 +246,15 @@ def plan_main(argv):
             cfg = cfg.replace(moe_backend=args.moe_backend)
         if args.ep > 0 and cfg.num_experts > 0:
             cfg = cfg.replace(expert_parallel=args.ep)
+        if args.layer_groups > 0 and cfg.reversible \
+                and cfg.family != "hybrid":
+            # hybrid (zamba2) already shares its attn block as a built-in
+            # layer group; dense/moe archs opt in here
+            import math
+            cfg = cfg.replace(
+                num_layer_groups=math.gcd(cfg.num_layers,
+                                          args.layer_groups),
+                delta_rank=args.delta_rank)
         try:
             p = plan(cfg, budget_gb=args.budget_gb, batch=args.batch,
                      seq=args.seq, optimizer=args.optimizer,

@@ -53,6 +53,16 @@ def main():
                          "axis with an all-to-all dispatch; on CPU, fake "
                          "host devices are forced so --reduced smoke runs "
                          "exercise the real multi-device path")
+    ap.add_argument("--layer-groups", type=int, default=0,
+                    help="lean parameterization (DESIGN.md §14): share each "
+                         "main-stack layer's matrices across N layer groups "
+                         "(must divide the depth; requires a reversible "
+                         "config) — params and optimizer state shrink by "
+                         "the sharing factor")
+    ap.add_argument("--delta-rank", type=int, default=0,
+                    help="per-layer low-rank A·B delta on every shared "
+                         "matrix (B zero-init: exact no-op at step 0); "
+                         "0 = pure sharing; needs --layer-groups")
     ap.add_argument("--use-flash-kernel", action="store_true",
                     help="flash attention on the train path (Pallas fwd+bwd "
                          "kernels on TPU, tiled pure-JAX fallback here; "
@@ -91,6 +101,14 @@ def main():
     from repro.train.driver import RunConfig, train
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.layer_groups > 0:
+        cfg = cfg.replace(num_layer_groups=args.layer_groups,
+                          delta_rank=args.delta_rank)
+        if args.reduced:
+            # re-clamp to the reduced depth like reduce_config does
+            import math
+            cfg = cfg.replace(num_layer_groups=math.gcd(
+                cfg.num_layers, args.layer_groups))
     if args.moe_backend is not None:
         cfg = cfg.replace(moe_backend=args.moe_backend)
     if args.use_flash_kernel:

@@ -143,7 +143,16 @@ class MemoryEstimate:
 
 def _model_for(cfg: ModelConfig, n_units: int):
     from repro.models.model import Model
-    return Model(cfg.replace(num_layers=n_units * unit_layers_for(cfg)))
+    kw = dict(num_layers=n_units * unit_layers_for(cfg))
+    if cfg.num_layer_groups:
+        # keep the layer-group layout valid at probe depths 1/2 (groups
+        # must divide the depth); the depth-differenced ACTIVATION costs
+        # are layout-insensitive — params are netted out exactly via the
+        # probes' own spec trees
+        import math
+        kw["num_layer_groups"] = math.gcd(kw["num_layers"],
+                                          cfg.num_layer_groups)
+    return Model(cfg.replace(**kw))
 
 
 def estimate(cfg: ModelConfig, batch: int, seq: int,
@@ -176,8 +185,21 @@ def estimate(cfg: ModelConfig, batch: int, seq: int,
             byt = array_bytes(st)
             main_n += cnt
             main_b += byt
-            per_layer_n = max(per_layer_n, cnt // s.n)
-            per_layer_b = max(per_layer_b, byt // s.n)
+            if s.layout is not None:
+                # grouped stack (DESIGN.md §14): one layer's {delta, per}
+                # slice is live per iteration, but the base cotangent
+                # accumulator — grouped shape, already 1/sharing-factor of
+                # a flat stacked grad — rides the whole backward walk
+                base = st["base"]
+                bn = sum(l.size
+                         for l in jax.tree_util.tree_leaves(base))
+                bb = array_bytes(base)
+                ln = (cnt - bn) // s.layout.n_layers + bn
+                lb = (byt - bb) // s.layout.n_layers + bb
+            else:
+                ln, lb = cnt // s.n, byt // s.n
+            per_layer_n = max(per_layer_n, ln)
+            per_layer_b = max(per_layer_b, lb)
         grad_bytes = ((param_bytes - main_b) + per_layer_b
                       if optimizer == "lomo"
                       else 4 * ((n_params - main_n) + per_layer_n))

@@ -27,6 +27,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence
 
+import jax
+
 from repro.configs.base import ModelConfig
 from repro.memory import estimator as est_mod
 from repro.memory.estimator import GiB, MemoryEstimate
@@ -56,6 +58,13 @@ class MemoryPlan:
     # per-MoE-layer expert-parallel a2a comm cost (estimator.ep_a2a_cost);
     # None unless cfg.expert_parallel > 0
     moe_ep: Optional[dict] = None
+    # lean layer-group sharing summary (DESIGN.md §14): set when the config
+    # groups its layers — flat-equivalent params+opt bytes and the realized
+    # sharing factor
+    lean: Optional[dict] = None
+    # True when the config COULD group (reversible, ungrouped, non-hybrid):
+    # surfaces --layer-groups as a DOES-NOT-FIT lever
+    grouping_available: bool = False
 
     def report(self) -> str:
         e = self.est
@@ -93,6 +102,14 @@ class MemoryPlan:
                 f"(∝ 1/EP), expected wire "
                 f"{m['a2a_expected_wire_bytes'] / GiB:.3f} GiB, "
                 f"dense-emulation buffer {m['a2a_buffer_bytes'] / GiB:.3f} GiB")
+        if self.lean is not None:
+            le = self.lean
+            lines.append(
+                f"  lean layer-groups (groups={le['num_layer_groups']}, "
+                f"delta_rank={le['delta_rank']}): params+opt "
+                f"{(e.param_bytes + e.opt_bytes) / GiB:.2f} GiB vs flat "
+                f"{(le['flat_param_bytes'] + le['flat_opt_bytes']) / GiB:.2f}"
+                f" GiB — sharing factor {le['factor']:.2f}x")
         if self.fits:
             verdict = "FITS"
         else:
@@ -101,6 +118,8 @@ class MemoryPlan:
                 levers.append("--fused-optimizer")
             if self.optimizer != "lomo":
                 levers.append("--optimizer lomo")
+            if self.grouping_available:
+                levers.append("--layer-groups N (lean weight sharing)")
             verdict = (
                 f"DOES NOT FIT (over by "
                 f"{(self.device_bytes - self.budget_bytes) / GiB:.2f} GiB"
@@ -117,6 +136,26 @@ class MemoryPlan:
 def _segments(policies: Sequence[str]):
     from repro.core.reversible import policy_segments
     return policy_segments(list(policies))
+
+
+def _lean_info(cfg: ModelConfig, optimizer: str) -> Optional[dict]:
+    """Sharing summary of a grouped config vs its flat twin — abstract spec
+    trees only (nothing is allocated)."""
+    if not cfg.num_layer_groups:
+        return None
+    from repro.models.model import Model
+    ap = Model(cfg.replace(num_layer_groups=0, delta_rank=0)
+               ).abstract_params()
+    gp = Model(cfg).abstract_params()
+    opt = est_mod.optimizer_by_name(optimizer)
+    fp, fo = (est_mod.array_bytes(ap),
+              est_mod.array_bytes(jax.eval_shape(opt.init, ap)))
+    lp, lo = (est_mod.array_bytes(gp),
+              est_mod.array_bytes(jax.eval_shape(opt.init, gp)))
+    return {"num_layer_groups": cfg.num_layer_groups,
+            "delta_rank": cfg.delta_rank,
+            "flat_param_bytes": fp, "flat_opt_bytes": fo,
+            "factor": (fp + fo) / max(lp + lo, 1)}
 
 
 def _greedy(e: MemoryEstimate, budget: int, stages) -> List[str]:
@@ -160,6 +199,9 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
                 else est_mod.attention_backward_cost(cfg, batch, seq))
     moe_ep = (est_mod.ep_a2a_cost(cfg, batch, seq)
               if cfg.expert_parallel > 0 else None)
+    lean = _lean_info(cfg, optimizer)
+    grouping_available = (not cfg.num_layer_groups and cfg.reversible
+                          and cfg.family != "hybrid")
 
     def cost(policies: List[str]) -> int:
         if not trace_check:
@@ -184,7 +226,8 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
             arch=cfg.name, batch=batch, seq=seq, optimizer=optimizer,
             budget_bytes=budget, policies=policies, est=e,
             device_bytes=device, host_bytes=e.host_total(policies),
-            fits=device <= budget, attn_bwd=attn_bwd, moe_ep=moe_ep)
+            fits=device <= budget, attn_bwd=attn_bwd, moe_ep=moe_ep,
+            lean=lean, grouping_available=grouping_available)
         if best.fits:
             return best
     return best

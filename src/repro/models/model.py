@@ -28,9 +28,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import adapters as ad
-from repro.core.reversible import (chain, coupling, make_coupled, merge_streams,
-                                   mixed_policy_stack, reversible_stack,
-                                   split_streams)
+from repro.core.reversible import (chain, coupling, grouped_mixed_policy_stack,
+                                   grouped_reversible_stack, make_coupled,
+                                   merge_streams, mixed_policy_stack,
+                                   read_unit, reversible_stack, split_streams)
 from repro.models import common, moe as moe_lib, spec, ssm as ssm_lib
 from repro.models.common import (attention, attention_decode, attn_specs,
                                  cross_attention_decode, cross_kv,
@@ -56,6 +57,9 @@ class StackDef:
     moe_tap: Optional[Callable] = None  # (lp, sh, ctx, i, x1, x2) ->
     #   (router params, (T, d) routing input) — the audit layer re-runs the
     #   router through this to compute per-expert stats (obs/audit, §12)
+    layout: Optional[spec.GroupLayout] = None  # layer-group tie map: when
+    #   set, the stack's params are {"base", "delta", "per"} (DESIGN.md §14)
+    #   and every walk reads units through the group indirection
 
 
 # ===================================================================== helpers
@@ -306,10 +310,14 @@ def build_rwkv(cfg: ModelConfig):
 
 
 def build_zamba(cfg: ModelConfig):
-    """Mamba2 backbone; a SHARED attention+MLP block (weights in the `shared`
-    tree, gradients accumulated across applications) every ``attn_period``
-    layers.  Unit = attn_period mamba couplings (alternating target stream)
-    + the shared attn/MLP couplings."""
+    """Mamba2 backbone; a SHARED attention+MLP block every ``attn_period``
+    layers, expressed as a single LAYER GROUP (G=1): the attn/MLP keys live
+    in the unit tree's ``base`` with one canonical slice that every unit
+    reads, so gradient accumulation across applications is the grouped
+    walks' ordinary base scatter-add (DESIGN.md §14) — no bespoke
+    shared-tree path.  Unit = attn_period mamba couplings (alternating
+    target stream, per-layer under ``per``) + the shared attn/MLP
+    couplings."""
     d, half = cfg.d_model, cfg.stream_dim
     k = cfg.attn_period
     n_units, tail = cfg.num_layers // k, cfg.num_layers % k
@@ -334,27 +342,27 @@ def build_zamba(cfg: ModelConfig):
                                          _up(sub_p["ad"], h)))
 
     def attn_F(p, sh, ctx, i, x1, x2):
-        n1 = rms_norm(x1, sh["norm1"], cfg.norm_eps)
-        n2 = rms_norm(x2, sh["norm2"], cfg.norm_eps)
+        n1 = rms_norm(x1, p["norm1"], cfg.norm_eps)
+        n2 = rms_norm(x2, p["norm2"], cfg.norm_eps)
         if cfg.fold_adapters:
-            eff = _fold_attn(sh["attn_ad"], sh["attn"])
+            eff = _fold_attn(p["attn_ad"], p["attn"])
             return attention(eff, cfg, _act_constrain(n1), _act_constrain(n2),
                              positions_q=ctx["positions"],
                              positions_k=ctx["positions"])
-        att = attention(sh["attn"], cfg, _up(sh["attn_ad"], n1),
-                        _up(sh["attn_ad"], n2),
+        att = attention(p["attn"], cfg, _up(p["attn_ad"], n1),
+                        _up(p["attn_ad"], n2),
                         positions_q=ctx["positions"], positions_k=ctx["positions"])
-        return _down(sh["attn_ad"], att)
+        return _down(p["attn_ad"], att)
 
     def mlp_G(p, sh, ctx, i, y1, _=None):
-        h = rms_norm(y1, sh["norm_mlp"], cfg.norm_eps)
+        h = rms_norm(y1, p["norm_mlp"], cfg.norm_eps)
         if cfg.fold_adapters:
-            pu, pd = sh["mlp_ad"]["p_up"], sh["mlp_ad"]["p_down"]
-            eff = {"w_gate": pu @ sh["mlp"]["w_gate"],
-                   "w_up": pu @ sh["mlp"]["w_up"],
-                   "w_down": sh["mlp"]["w_down"] @ pd}
+            pu, pd = p["mlp_ad"]["p_up"], p["mlp_ad"]["p_down"]
+            eff = {"w_gate": pu @ p["mlp"]["w_gate"],
+                   "w_up": pu @ p["mlp"]["w_up"],
+                   "w_down": p["mlp"]["w_down"] @ pd}
             return mlp(eff, _act_constrain(h))
-        return _down(sh["mlp_ad"], mlp(sh["mlp"], _up(sh["mlp_ad"], h)))
+        return _down(p["mlp_ad"], mlp(p["mlp"], _up(p["mlp_ad"], h)))
 
     def unit_fwd(lp, sh, ctx, i, x1, x2):
         for j in range(k):
@@ -399,10 +407,10 @@ def build_zamba(cfg: ModelConfig):
             else:
                 x2 = x2 + delta
             nstates.append(nst)
-        q_in = _up(sh["attn_ad"], rms_norm(x1, sh["norm1"], cfg.norm_eps))
-        kv_in = _up(sh["attn_ad"], rms_norm(x2, sh["norm2"], cfg.norm_eps))
-        att, nkv = attention_decode(sh["attn"], cfg, q_in, kv_in, cu["kv"], ctx["t"])
-        y1 = x1 + _down(sh["attn_ad"], att)
+        q_in = _up(lp["attn_ad"], rms_norm(x1, lp["norm1"], cfg.norm_eps))
+        kv_in = _up(lp["attn_ad"], rms_norm(x2, lp["norm2"], cfg.norm_eps))
+        att, nkv = attention_decode(lp["attn"], cfg, q_in, kv_in, cu["kv"], ctx["t"])
+        y1 = x1 + _down(lp["attn_ad"], att)
         y2 = x2 + mlp_G(lp, sh, ctx, i, y1)
         nm = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *nstates)
         return (y1, y2), {"m": nm, "kv": nkv}
@@ -414,15 +422,20 @@ def build_zamba(cfg: ModelConfig):
                     lambda a: jnp.stack([a] * k), one),
                 "kv": init_kv_cache(cfg, B, buf, dtype)}
 
-    unit_specs = {"inner": spec.stack(k, msub)}
-    shared_specs = {
+    unit_specs = {
+        "inner": spec.stack(k, msub),
         "norm1": norm_spec(half), "norm2": norm_spec(half),
         "attn_ad": ad.adapter_specs(d), "attn": attn_specs(cfg),
         "norm_mlp": norm_spec(half), "mlp_ad": ad.adapter_specs(d),
         "mlp": mlp_specs(cfg),
     }
+    # the attn_period shared block IS a layer group: one base slice (G=1)
+    # every unit reads; the mamba inners stay per-layer
+    layout = spec.GroupLayout(n_units, 1, (0,) * n_units,
+                              ("norm1", "norm2", "attn_ad", "attn",
+                               "norm_mlp", "mlp_ad", "mlp"), 0)
     stacks = [StackDef("units", n_units, unit_specs, unit_fwd, unit_inv,
-                       unit_decode, cache_init)]
+                       unit_decode, cache_init, layout=layout)]
 
     if tail:
         # trailing mamba layers (no shared-attn application); update stream 1
@@ -441,7 +454,7 @@ def build_zamba(cfg: ModelConfig):
                           "conv": jnp.zeros((B, K - 1, d_inner), dtype)}}
 
         stacks.append(StackDef("tail", tail, msub, t_fwd, t_inv, t_decode, t_cache))
-    return stacks, shared_specs
+    return stacks, {}
 
 
 def build_encdec(cfg: ModelConfig):
@@ -615,6 +628,28 @@ class Model:
                         num_experts_raw=cfg.num_experts)
         self.cfg = cfg
         self.stacks, self.shared_specs = _BUILDERS[cfg.family](cfg)
+        if cfg.num_layer_groups:
+            if not cfg.reversible:
+                raise ValueError(
+                    f"{cfg.name}: num_layer_groups="
+                    f"{cfg.num_layer_groups} requires reversible=True — "
+                    f"the grouped walks live in the reversible stack "
+                    f"machinery (set reversible or drop --layer-groups)")
+            if cfg.family == "hybrid":
+                raise ValueError(
+                    f"{cfg.name}: the zamba2 hybrid family already shares "
+                    f"its attn/MLP block as a built-in layer group (one "
+                    f"group per attn_period window); num_layer_groups is "
+                    f"not composable with it — use a dense/moe/ssm/vlm "
+                    f"config for --layer-groups")
+            for s in self.stacks:
+                # grouping covers the main stacks; an encdec encoder keeps
+                # its flat layout (plans and fused walks cover mains only)
+                if s.role != "main" or s.layout is not None:
+                    continue
+                s.layout = spec.contiguous_layout(
+                    s.n, cfg.num_layer_groups, tuple(s.unit_specs.keys()),
+                    cfg.delta_rank)
         d = cfg.d_model
         self.top_specs = {
             "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"),
@@ -629,7 +664,10 @@ class Model:
 
     def param_specs(self):
         if self.cfg.reversible:
-            tree = {s.name: spec.stack(s.n, s.unit_specs) for s in self.stacks}
+            tree = {s.name: (spec.grouped_stack(s.layout, s.unit_specs)
+                             if s.layout is not None
+                             else spec.stack(s.n, s.unit_specs))
+                    for s in self.stacks}
         else:
             tree = {s.name: spec.stack(s.n, _std_specs(self.cfg, self.cfg.family == "moe"))
                     for s in self.stacks if s.role == "main"}
@@ -779,8 +817,18 @@ class Model:
                     continue
                 if policy_list is not None:
                     seg, policy_list = policy_list[:s.n], policy_list[s.n:]
-                    apply = mixed_policy_stack(s.fwd, s.inv, seg,
-                                               half_inv=s.half_inv)
+                    if s.layout is not None:
+                        apply = grouped_mixed_policy_stack(s.fwd, s.inv,
+                                                           s.layout, seg)
+                    else:
+                        apply = mixed_policy_stack(s.fwd, s.inv, seg,
+                                                   half_inv=s.half_inv)
+                elif s.layout is not None:
+                    sm = save_memory
+                    if sm == "half":
+                        sm = True        # grouped stacks: full inversion only
+                    apply = grouped_reversible_stack(s.fwd, s.inv, s.layout,
+                                                     save_memory=sm)
                 else:
                     sm = save_memory
                     if sm == "half" and s.half_inv is None:
@@ -899,9 +947,17 @@ class Model:
             buf = buf_len
             if cfg.sliding_window:
                 buf = min(buf_len, cfg.sliding_window)
-            caches[s.name] = jax.vmap(
-                lambda lp: s.cache_init(lp, batch_size, buf, dtype, ex))(
-                params["stacks"][s.name])
+            if s.layout is not None:
+                gp = params["stacks"][s.name]
+                caches[s.name] = jax.vmap(
+                    lambda i, s=s, gp=gp: s.cache_init(
+                        read_unit(s.layout, gp, i), batch_size, buf, dtype,
+                        ex))(jnp.arange(s.n, dtype=jnp.int32))
+            else:
+                caches[s.name] = jax.vmap(
+                    lambda lp, s=s: s.cache_init(lp, batch_size, buf, dtype,
+                                                 ex))(
+                    params["stacks"][s.name])
         return caches
 
     def decode_step_hidden(self, params, cache, token):
@@ -925,13 +981,25 @@ class Model:
             if s.role != "main":
                 continue
 
-            def body(carry, inp, s=s):
-                i, lp, cu = inp
-                (a, b), ncu = s.decode(lp, shared, ctx, i, *carry, cu)
-                return (a, b), ncu
             idxs = jnp.arange(s.n, dtype=jnp.int32)
-            (x1, x2), ncache = jax.lax.scan(
-                body, (x1, x2), (idxs, params["stacks"][s.name], cache[s.name]))
+            if s.layout is not None:
+                gp = params["stacks"][s.name]
+
+                def gbody(carry, inp, s=s, gp=gp):
+                    i, cu = inp
+                    lp = read_unit(s.layout, gp, i)
+                    (a, b), ncu = s.decode(lp, shared, ctx, i, *carry, cu)
+                    return (a, b), ncu
+                (x1, x2), ncache = jax.lax.scan(
+                    gbody, (x1, x2), (idxs, cache[s.name]))
+            else:
+                def body(carry, inp, s=s):
+                    i, lp, cu = inp
+                    (a, b), ncu = s.decode(lp, shared, ctx, i, *carry, cu)
+                    return (a, b), ncu
+                (x1, x2), ncache = jax.lax.scan(
+                    body, (x1, x2),
+                    (idxs, params["stacks"][s.name], cache[s.name]))
             new_cache[s.name] = ncache
         h = rms_norm(merge_streams(x1, x2), params["final_norm"], cfg.norm_eps)
         return h, new_cache

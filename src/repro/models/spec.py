@@ -9,6 +9,23 @@ derive, without ever materialising full-size weights:
 
 Stacked (scanned) layers are expressed by ``stack(n, tree)`` which prepends a
 ("layers", n) dimension to every leaf.
+
+Lean parameterization (DESIGN.md §14): ``GroupLayout`` + ``grouped_stack``
+replace the flat "one leaf per layer" layout with ALBERT-style layer groups —
+each large matrix is materialised ONCE per group (leading "groups" dim) and
+every layer in the group reads the same slice, optionally perturbed by a
+per-layer low-rank ``A·B`` delta (leading "layers" dim, ``B`` zero-initialised
+so deltas start as exact no-ops).  A grouped stack's param tree is
+
+    {"base":  <grouped-key subtree, leading dim n_groups>,
+     "delta": <same subtree with each array leaf replaced by
+               {"a", "b"} (low-rank) or {"d"} (full, small leaves);
+               {} when delta_rank == 0>,
+     "per":   <non-grouped keys, flat leading dim n_layers>}
+
+``count_params``/``initialize`` need no special casing: tied leaves exist
+exactly once in the spec tree, so they are neither double-counted nor
+re-initialised per layer.
 """
 from __future__ import annotations
 
@@ -26,9 +43,15 @@ class ParamSpec:
     axes: Tuple[Optional[str], ...]          # logical axis names, len == len(shape)
     init: str = "fan_in"                     # fan_in | zeros | ones | normal | small
     dtype: Optional[str] = None              # override model dtype
+    stack_dims: int = 0                      # leading scanned/grouped dims to skip
+    #   when computing fan-in (stack()/grouped_stack() increment this so a
+    #   stacked (L, d, m) or doubly-stacked (U, k, d, m) leaf scales by d,
+    #   never by the stacking dims)
 
     def __post_init__(self):
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        assert 0 <= self.stack_dims <= len(self.shape), \
+            (self.shape, self.stack_dims)
 
 
 def is_spec(x) -> bool:
@@ -42,7 +65,7 @@ def _map(tree, fn):
 def stack(n: int, tree):
     """Prepend a scanned-layers dimension to every spec in the tree."""
     return _map(tree, lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
-                                          s.init, s.dtype))
+                                          s.init, s.dtype, s.stack_dims + 1))
 
 
 def abstract(tree, dtype: str):
@@ -69,8 +92,10 @@ def _init_leaf(spec: ParamSpec, key, dtype) -> jax.Array:
         # point is contractive (see DESIGN.md §2 — matches pretrained stats)
         return jax.random.normal(key, shape).astype(dt)
     if spec.init == "fan_in":
-        # fan-in scaled; for stacked specs skip the leading layers dim
-        fan = shape[-2] if len(shape) >= 2 else shape[-1]
+        # fan-in scaled over the per-unit core shape: the leading
+        # stack_dims (scanned layers / groups) never contribute to fan
+        core = shape[spec.stack_dims:]
+        fan = core[-2] if len(core) >= 2 else core[-1]
         return (jax.random.normal(key, shape) / math.sqrt(max(fan, 1))).astype(dt)
     raise ValueError(f"unknown init {spec.init}")
 
@@ -85,3 +110,120 @@ def initialize(tree, key, dtype: str):
 def count_params(tree) -> int:
     leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
     return sum(math.prod(s.shape) for s in leaves)
+
+
+# ================================================== layer-group lean layout
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupLayout:
+    """Static layer→group tie map of a grouped stack (not part of any pytree).
+
+    ``group_map[i]`` names the group whose ``base`` slice layer ``i`` reads;
+    ``grouped_keys`` are the top-level unit-tree keys that are shared (the
+    rest stay per-layer under ``"per"``); ``delta_rank`` > 0 adds per-layer
+    trainable low-rank deltas to every shared matrix.
+    """
+    n_layers: int
+    n_groups: int
+    group_map: Tuple[int, ...]
+    grouped_keys: Tuple[str, ...]
+    delta_rank: int = 0
+
+    def __post_init__(self):
+        assert len(self.group_map) == self.n_layers, \
+            (self.n_layers, self.group_map)
+        assert all(0 <= g < self.n_groups for g in self.group_map), \
+            (self.n_groups, self.group_map)
+
+    def describe(self) -> dict:
+        """JSON-safe descriptor (checkpoint META, mismatch errors)."""
+        return {"n_layers": self.n_layers, "n_groups": self.n_groups,
+                "group_map": list(self.group_map),
+                "grouped_keys": list(self.grouped_keys),
+                "delta_rank": self.delta_rank}
+
+
+def contiguous_layout(n_layers: int, n_groups: int, grouped_keys,
+                      delta_rank: int = 0) -> GroupLayout:
+    """Equal contiguous groups: layers [0, L/G) -> group 0, etc."""
+    if n_layers % n_groups:
+        raise ValueError(
+            f"num_layer_groups={n_groups} must divide the stack depth "
+            f"{n_layers} (contiguous equal groups)")
+    per = n_layers // n_groups
+    return GroupLayout(n_layers, n_groups,
+                       tuple(i // per for i in range(n_layers)),
+                       tuple(grouped_keys), delta_rank)
+
+
+def _delta_spec(s: ParamSpec, n_layers: int, rank: int):
+    """Per-layer delta specs for one shared leaf: low-rank {a, b} when the
+    trailing matrix is big enough, a full additive {d} otherwise (norms,
+    biases, gates).  ``b``/``d`` are zero-initialised so every delta starts
+    as an exact no-op (asserted in tests)."""
+    shape, axes = s.shape, s.axes
+    core = shape[s.stack_dims:]
+    if len(core) >= 2 and min(shape[-2], shape[-1]) > rank:
+        a = ParamSpec((n_layers,) + shape[:-1] + (rank,),
+                      ("layers",) + axes[:-1] + (None,),
+                      "fan_in", s.dtype, s.stack_dims + 1)
+        b = ParamSpec((n_layers,) + shape[:-2] + (rank, shape[-1]),
+                      ("layers",) + axes[:-2] + (None, axes[-1]),
+                      "zeros", s.dtype, s.stack_dims + 1)
+        return {"a": a, "b": b}
+    return {"d": ParamSpec((n_layers,) + shape, ("layers",) + axes,
+                           "zeros", s.dtype, s.stack_dims + 1)}
+
+
+def grouped_stack(layout: GroupLayout, tree):
+    """Grouped analogue of ``stack``: {"base", "delta", "per"} spec tree.
+
+    ``base`` holds one canonical leaf per group (leading ("groups", G) dim);
+    ``delta`` mirrors base with each ParamSpec replaced by its per-layer
+    delta dict; ``per`` flat-stacks the non-grouped keys.
+    """
+    missing = [k for k in layout.grouped_keys if k not in tree]
+    assert not missing, f"grouped keys {missing} not in unit specs {list(tree)}"
+    base_src = {k: tree[k] for k in layout.grouped_keys}
+    per_src = {k: v for k, v in tree.items() if k not in layout.grouped_keys}
+    base = _map(base_src,
+                lambda s: ParamSpec((layout.n_groups,) + s.shape,
+                                    ("groups",) + s.axes,
+                                    s.init, s.dtype, s.stack_dims + 1))
+    delta = ({} if layout.delta_rank == 0 else
+             _map(base_src,
+                  lambda s: _delta_spec(s, layout.n_layers, layout.delta_rank)))
+    return {"base": base, "delta": delta,
+            "per": stack(layout.n_layers, per_src)}
+
+
+def _leaf_delta(base, delta):
+    if "d" in delta:
+        eff = base.astype(jnp.float32) + delta["d"].astype(jnp.float32)
+    else:
+        eff = base.astype(jnp.float32) + jnp.einsum(
+            "...ir,...rj->...ij", delta["a"].astype(jnp.float32),
+            delta["b"].astype(jnp.float32))
+    return eff.astype(base.dtype)
+
+
+def apply_delta(base, delta):
+    """base + per-layer delta, recursing on the BASE tree's structure (the
+    delta node at an array-leaf position is its {a, b}/{d} dict — never
+    identified by key names, which would collide with LoRA adapter trees)."""
+    if isinstance(base, dict):
+        return {k: apply_delta(v, delta.get(k, {}) if isinstance(delta, dict)
+                               else {})
+                for k, v in base.items()}
+    if not delta:
+        return base
+    return _leaf_delta(base, delta)
+
+
+def materialize_unit(base_sl, delta_sl, per_sl):
+    """One layer's effective unit-param tree from its group's base slice,
+    its own delta slice, and its own per-layer slice."""
+    unit = apply_delta(base_sl, delta_sl)
+    unit.update(per_sl)
+    return unit

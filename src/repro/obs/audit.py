@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.reversible import layer_slice, reconstruction_metrics
+from repro.core.reversible import (layer_slice, read_unit,
+                                   reconstruction_metrics)
 
 
 def _block(x):
@@ -70,11 +71,18 @@ class LayerAuditor:
             return fns
         cfg = self.model.cfg
 
+        def unit(stacked, j):
+            # grouped stacks (DESIGN.md §14) materialise base[group] + delta
+            # per layer; flat stacks just slice.  j stays traced either way.
+            if s.layout is not None:
+                return read_unit(s.layout, stacked, j)
+            return layer_slice(stacked, j)
+
         def fwd(stacked, sh, ctx, j, x1, x2):
-            return s.fwd(layer_slice(stacked, j), sh, ctx, j, x1, x2)
+            return s.fwd(unit(stacked, j), sh, ctx, j, x1, x2)
 
         def inv(stacked, sh, ctx, j, y1, y2):
-            return s.inv(layer_slice(stacked, j), sh, ctx, j, y1, y2)
+            return s.inv(unit(stacked, j), sh, ctx, j, y1, y2)
 
         def recon(r1, r2, x1, x2):
             return reconstruction_metrics(r1, r2, x1, x2)
@@ -83,7 +91,7 @@ class LayerAuditor:
             # one layer's real backward work: vjp w.r.t. params + both
             # streams, reduced to a scalar so nothing is dead-code
             # eliminated and the caller can fence on device completion
-            lp = layer_slice(stacked, j)
+            lp = unit(stacked, j)
             (y1, y2), vjp = jax.vjp(
                 lambda lp_, a, b: s.fwd(lp_, sh, ctx, j, a, b), lp, x1, x2)
             dlp, d1, d2 = vjp((jnp.ones_like(y1), jnp.ones_like(y2)))
@@ -100,7 +108,7 @@ class LayerAuditor:
             from repro.models import moe as moe_lib
 
             def moe_stats(stacked, sh, ctx, j, x1, x2):
-                lp = layer_slice(stacked, j)
+                lp = unit(stacked, j)
                 rp, xf = s.moe_tap(lp, sh, ctx, j, x1, x2)
                 probs, _gates, expert_idx = moe_lib._route(rp, cfg, xf)
                 st = moe_lib.routing_stats(cfg, probs, expert_idx)

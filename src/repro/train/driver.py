@@ -112,11 +112,16 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
     opt_state = optimizer.init(params)
     start_step = 0
 
+    # layer-group tie maps (DESIGN.md §14) travel with every checkpoint:
+    # base leaves are only meaningful under the exact layer→group map
+    layouts = {s.name: s.layout.describe()
+               for s in model.stacks if s.layout is not None} or None
+
     latest = ckpt.latest_step(run.ckpt_dir)
     if latest is not None:
         t_rs = time.perf_counter()
         (params, opt_state), start_step = ckpt.restore(
-            run.ckpt_dir, (params, opt_state))
+            run.ckpt_dir, (params, opt_state), layouts=layouts)
         tel.emit("ckpt_restore", step=start_step,
                  dur_s=time.perf_counter() - t_rs)
         log_fn(f"[driver] resumed from step {start_step}")
@@ -226,7 +231,8 @@ def train(model, optimizer, data_cfg: DataConfig, run: RunConfig,
             window_s, window_steps = 0.0, 0
         if (step + 1) % run.ckpt_every == 0:
             t_sv = time.perf_counter()
-            ckpt.save(run.ckpt_dir, step + 1, (params, opt_state))
+            ckpt.save(run.ckpt_dir, step + 1, (params, opt_state),
+                      extra_meta={"layouts": layouts})
             save_s = time.perf_counter() - t_sv
             tel.counter("train.ckpt_saves").inc()
             tel.histogram("train.ckpt_save_s").observe(save_s)

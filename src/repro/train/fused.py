@@ -52,7 +52,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.reversible import (accumulate_shared, fused_stack_backward,
-                                   fused_stack_forward, read_layer,
+                                   fused_stack_forward,
+                                   grouped_fused_stack_backward,
+                                   grouped_fused_stack_forward, read_layer,
                                    shared_cotangent, write_layer,
                                    zero_shared)
 from repro.optim.adamw import apply_subtree, clip_guard, global_norm_sq
@@ -137,6 +139,17 @@ def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
     mains, policies = _stack_policies(model, save_memory)
     main_names = [s.name for s in mains]
     clip = float(getattr(optimizer, "clip_norm", 0.0) or 0.0)
+    layouts = {s.name: s.layout for s in mains}
+    gnames = [n for n in main_names if layouts[n] is not None]
+
+    def walk_view(tree, name):
+        """The per-layer trainable view of a stack-shaped tree: the whole
+        tree for flat stacks, {"delta", "per"} for grouped stacks — base
+        slices are updated exactly once per group AFTER the walk (the
+        grouped fused walk only accumulates their cotangents)."""
+        if layouts[name] is None or tree is None:
+            return tree
+        return {"delta": tree["delta"], "per": tree["per"]}
 
     def forward(pre_p, main_p, mbatch):
         tokens = mbatch["tokens"]
@@ -153,7 +166,10 @@ def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
         y1, y2 = x1, x2
         saves_all = []
         for s, pol in zip(mains, policies):
-            runf = fused_stack_forward(s.fwd, pol)
+            if s.layout is not None:
+                runf = grouped_fused_stack_forward(s.fwd, s.layout, pol)
+            else:
+                runf = fused_stack_forward(s.fwd, pol)
             (y1, y2), saves = runf(main_p[s.name], shared, ctx, y1, y2)
             saves_all.append(saves)
         return (y1, y2), saves_all, shared, ctx, pre_vjp
@@ -161,22 +177,33 @@ def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
     def backward(main_p, extras_by_stack, saves_all, shared, ctx,
                  y1, y2, ct1, ct2, consume_factory):
         """Reverse over the main stacks; returns the (in-place updated)
-        per-stack params/extras + per-stack stat scalars, the prelude
-        stream cotangents, and the shared-tree cotangent."""
+        per-stack params/extras + per-stack stat scalars + per-stack base
+        cotangent accumulators (grouped stacks only; None for flat), the
+        prelude stream cotangents, and the shared-tree cotangent."""
         csh_total = zero_shared(shared)
-        new_p, new_ex, stats = {}, {}, {}
+        new_p, new_ex, stats, accs = {}, {}, {}, {}
         c1, c2 = ct1, ct2
         for k in range(len(mains) - 1, -1, -1):
             s = mains[k]
-            runb = fused_stack_backward(s.fwd, s.inv, policies[k],
-                                        consume_factory(s.name))
             ex = (None if extras_by_stack is None
                   else extras_by_stack[s.name])
-            (new_p[s.name], new_ex[s.name], stats[s.name]), (y1, y2), \
-                (c1, c2), csh = runb(main_p[s.name], ex, saves_all[k],
-                                     shared, ctx, y1, y2, c1, c2)
+            if s.layout is not None:
+                runb = grouped_fused_stack_backward(
+                    s.fwd, s.inv, s.layout, policies[k],
+                    consume_factory(s.name))
+                (new_p[s.name], new_ex[s.name], stats[s.name],
+                 accs[s.name]), (y1, y2), (c1, c2), csh = runb(
+                    main_p[s.name], ex, saves_all[k], shared, ctx,
+                    y1, y2, c1, c2)
+            else:
+                runb = fused_stack_backward(s.fwd, s.inv, policies[k],
+                                            consume_factory(s.name))
+                (new_p[s.name], new_ex[s.name], stats[s.name]), (y1, y2), \
+                    (c1, c2), csh = runb(main_p[s.name], ex, saves_all[k],
+                                         shared, ctx, y1, y2, c1, c2)
+                accs[s.name] = None
             csh_total = accumulate_shared(csh_total, csh)
-        return (new_p, new_ex, stats), (c1, c2), csh_total
+        return (new_p, new_ex, stats, accs), (c1, c2), csh_total
 
     def run_micro(pre_p, main_p, tail_p, mbatch):
         """Forward + tail vjp for one microbatch."""
@@ -203,10 +230,52 @@ def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
         main_st = {n: {c: comp[c][1][n] for c in parts} for n in main_names}
         tail_st = {c: v[2] for c, v in comp.items()}
         step_no = opt_state["step"] + 1
+        # grouped stacks: the walk only sees/updates the per-layer
+        # {"delta", "per"} view; base params + state are held aside and
+        # updated once per group after the walk
+        main_st_walk = {n: {c: walk_view(main_st[n][c], n) for c in parts}
+                        for n in main_names}
+
+        def group_update(name, pb, acc, stb, scale, skip, n_div=1):
+            """Apply the optimizer to every base group slice exactly once,
+            from the walk's scatter-added cotangent accumulator."""
+            mkn = main_mk.get(name)
+            mk = None if mkn is None else mkn["base"]
+            ng = layouts[name].n_groups
+
+            def gbody(g, carry):
+                pb_, stb_ = carry
+                grad = jax.tree_util.tree_map(lambda a: a / n_div,
+                                              read_layer(acc, g))
+                new_sl, new_st = apply_subtree(
+                    optimizer, read_layer(pb_, g), grad,
+                    read_layer(stb_, g), step=step_no, scale=scale,
+                    mask=mk, skip=skip)
+                return (write_layer(pb_, new_sl, g),
+                        write_layer(stb_, new_st, g))
+            return jax.lax.fori_loop(0, ng, gbody, (pb, stb))
+
+        def finish_grouped(new_main, new_main_st, accs, scale, skip,
+                           n_div=1):
+            """Graft once-per-group base updates onto the walk results."""
+            for n in gnames:
+                base_st = {c: main_st[n][c]["base"] for c in parts}
+                new_base, new_base_st = group_update(
+                    n, new_main[n].get("base", main_p[n]["base"]),
+                    accs[n], base_st, scale, skip, n_div)
+                new_main[n] = dict(new_main[n], base=new_base)
+                new_main_st[n] = {c: dict(new_main_st[n][c],
+                                          base=new_base_st[c])
+                                  for c in parts}
+            return new_main, new_main_st
+
+        def base_norm_sq(accs, n_div=1):
+            return sum(global_norm_sq(accs[n]) for n in gnames) / (n_div *
+                                                                   n_div)
 
         def upd_factory(scale, skip):
             def for_stack(name):
-                mk = main_mk.get(name)
+                mk = walk_view(main_mk.get(name), name)
 
                 def consume(i, lp, dlp, ex):
                     new_lp, new_st = apply_subtree(
@@ -236,27 +305,31 @@ def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
             if clip:
                 # probe walk: per-layer squared norms only — each layer's
                 # grad is reduced to a scalar and freed before the next
+                # (grouped stacks additionally return their base cotangent
+                # accumulator, whose norm joins the global sum)
                 probe = lambda name: (          # noqa: E731
                     lambda i, lp, dlp, ex: (None, None,
                                             global_norm_sq(dlp)))
-                (_, _, sumsq), (d1, d2), csh = backward(
+                (_, _, sumsq, p_accs), (d1, d2), csh = backward(
                     main_p, None, saves_all, shared, ctx, y1, y2, ct1, ct2,
                     probe)
                 (dpre,) = pre_vjp((d1, d2, shared_cotangent(csh, shared)))
                 total_sq = (global_norm_sq((dpre, dtail))
-                            + sum(sumsq.values()))
+                            + sum(sumsq.values()) + base_norm_sq(p_accs))
                 scale, skip = clip_guard(total_sq, clip)
-                (new_main, new_main_st, _), _, _ = backward(
-                    main_p, main_st, saves_all, shared, ctx, y1, y2,
+                (new_main, new_main_st, _, accs), _, _ = backward(
+                    main_p, main_st_walk, saves_all, shared, ctx, y1, y2,
                     ct1, ct2, upd_factory(scale, skip))
             else:
                 scale, skip = 1.0, None
-                (new_main, new_main_st, sumsq), (d1, d2), csh = backward(
-                    main_p, main_st, saves_all, shared, ctx, y1, y2,
-                    ct1, ct2, upd_factory(scale, skip))
+                (new_main, new_main_st, sumsq, accs), (d1, d2), csh = \
+                    backward(main_p, main_st_walk, saves_all, shared, ctx,
+                             y1, y2, ct1, ct2, upd_factory(scale, skip))
                 (dpre,) = pre_vjp((d1, d2, shared_cotangent(csh, shared)))
                 total_sq = (global_norm_sq((dpre, dtail))
-                            + sum(sumsq.values()))
+                            + sum(sumsq.values()) + base_norm_sq(accs))
+            new_main, new_main_st = finish_grouped(new_main, new_main_st,
+                                                   accs, scale, skip)
         else:
             gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
             if gb % n_micro != 0:
@@ -279,36 +352,45 @@ def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
                     jnp.zeros((), jnp.float32)))
 
             def body(carry, mbatch):
-                acc_main, acc_pre, acc_tail, loss_sum = carry
+                acc_main, acc_base, acc_pre, acc_tail, loss_sum = carry
                 (loss, saves_all, shared, ctx, pre_vjp, dtail,
                  (y1, y2), (ct1, ct2)) = run_micro(pre_p, main_p, tail_p,
                                                    mbatch)
-                (_, acc_main, _), (d1, d2), csh = backward(
+                (_, acc_main, _, accs), (d1, d2), csh = backward(
                     main_p, acc_main, saves_all, shared, ctx, y1, y2,
                     ct1, ct2, acc_factory)
                 (dpre,) = pre_vjp((d1, d2, shared_cotangent(csh, shared)))
                 add = lambda a, g: a + g.astype(a.dtype)    # noqa: E731
+                acc_base = {n: jax.tree_util.tree_map(add, acc_base[n],
+                                                      accs[n])
+                            for n in gnames}
                 acc_pre = jax.tree_util.tree_map(add, acc_pre, dpre)
                 acc_tail = jax.tree_util.tree_map(add, acc_tail, dtail)
-                return (acc_main, acc_pre, acc_tail, loss_sum + loss), None
+                return (acc_main, acc_base, acc_pre, acc_tail,
+                        loss_sum + loss), None
 
-            init = ({n: zeros(main_p[n]) for n in main_names},
+            init = ({n: zeros(walk_view(main_p[n], n)) for n in main_names},
+                    {n: zeros(main_p[n]["base"]) for n in gnames},
                     zeros(pre_p), zeros(tail_p), 0.0)
-            (acc_main, acc_pre, acc_tail, loss_sum), _ = jax.lax.scan(
-                body, init, resh)
+            (acc_main, acc_base, acc_pre, acc_tail, loss_sum), _ = \
+                jax.lax.scan(body, init, resh)
             loss = loss_sum / n_micro
             avg = lambda t: jax.tree_util.tree_map(     # noqa: E731
                 lambda a: a / n_micro, t)
             dpre, dtail = avg(acc_pre), avg(acc_tail)
             total_sq = (global_norm_sq((dpre, dtail))
-                        + global_norm_sq(acc_main) / (n_micro * n_micro))
+                        + global_norm_sq(acc_main) / (n_micro * n_micro)
+                        + base_norm_sq(acc_base, n_micro))
             scale, skip = (clip_guard(total_sq, clip) if clip
                            else (1.0, None))
             new_main, new_main_st = {}, {}
             for n in main_names:
-                mk = main_mk.get(n)
+                mk = walk_view(main_mk.get(n), n)
                 acc_n = acc_main[n]
-                nl = jax.tree_util.tree_leaves(main_p[n])[0].shape[0]
+                lay = layouts[n]
+                pw, stw = walk_view(main_p[n], n), main_st_walk[n]
+                nl = (lay.n_layers if lay is not None else
+                      jax.tree_util.tree_leaves(main_p[n])[0].shape[0])
 
                 def ubody(j, carry, mk=mk, acc_n=acc_n):
                     pb, stb = carry
@@ -321,7 +403,13 @@ def make_fused_train_step(model, optimizer, *, n_micro: int = 1,
                     return (write_layer(pb, new_lp, j),
                             write_layer(stb, new_st, j))
                 new_main[n], new_main_st[n] = jax.lax.fori_loop(
-                    0, nl, ubody, (main_p[n], main_st[n]))
+                    0, nl, ubody, (pw, stw))
+                if lay is not None:
+                    new_main[n] = dict(new_main[n],
+                                       base=main_p[n]["base"])
+            new_main, new_main_st = finish_grouped(new_main, new_main_st,
+                                                   acc_base, scale, skip,
+                                                   n_micro)
 
         new_params, new_opt = finish(new_main, new_main_st, dpre, dtail,
                                      scale, skip)

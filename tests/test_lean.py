@@ -1,0 +1,252 @@
+"""Lean parameterization (DESIGN.md §14): layer-group weight sharing +
+per-layer low-rank deltas through the spec → model → optim → checkpoint
+stack.
+
+Gates: grouped G==L with zero-effect deltas is NUMERICALLY IDENTICAL
+(bitwise forward, matching grads) to the flat layout; delta B/d leaves are
+zero-initialised; fused == unfused on a grouped config; tied leaves are
+neither double-counted nor re-initialised; fan-in init never scales by the
+stacked dims; sharding keeps the "groups" dim replicated; checkpoints carry
+the layer→group map and refuse a mismatched restore.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, st
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, packed_batches
+from repro.models import spec
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+
+
+def _batch(cfg, seq=32, batch=2):
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                    global_batch=batch)
+    return next(packed_batches(dc))
+
+
+def _flat_from_grouped(pg, stack_name="layers"):
+    """Flat params carrying the grouped model's exact weights (G == L)."""
+    pf = {k: v for k, v in pg.items() if k != "stacks"}
+    stacks = {}
+    for name, tree in pg["stacks"].items():
+        stacks[name] = (tree["base"] if isinstance(tree, dict)
+                        and set(tree) == {"base", "delta", "per"}
+                        else tree)
+    pf["stacks"] = stacks
+    return pf
+
+
+def _max_abs_diff(a, b):
+    d = jax.tree_util.tree_map(
+        lambda x, y: jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))), a, b)
+    return float(jax.tree_util.tree_reduce(jnp.maximum, d, jnp.zeros(())))
+
+
+# ------------------------------------------------ bit-identity property
+
+
+@settings(max_examples=4, deadline=None)
+@given(arch=st.sampled_from(["qwen2-moe-a2.7b", "h2o-danube-1.8b"]),
+       delta_rank=st.sampled_from([0, 8]))
+def test_grouped_identity_with_one_layer_groups(arch, delta_rank):
+    """G == n_layers with zero-effect deltas: the grouped model is the flat
+    model — bitwise-equal loss, matching gradients on the shared leaves."""
+    cfg = get_config(arch, reduced=True)
+    gcfg = cfg.replace(num_layer_groups=cfg.num_layers,
+                       delta_rank=delta_rank)
+    gm, fm = Model(gcfg), Model(cfg)
+    pg = gm.init(jax.random.PRNGKey(0))
+    pf = _flat_from_grouped(pg)
+
+    # every delta starts as an exact no-op: b (low-rank) / d (full) leaves
+    # are zero-initialised
+    n_zero_leaves = 0
+    for name, tree in pg["stacks"].items():
+        if not (isinstance(tree, dict) and set(tree) == {"base", "delta",
+                                                         "per"}):
+            continue
+
+        def check(node):
+            nonlocal n_zero_leaves
+            if isinstance(node, dict) and set(node) <= {"a", "b", "d"} \
+                    and not any(isinstance(v, dict) for v in node.values()):
+                for k in ("b", "d"):
+                    if k in node:
+                        assert not np.asarray(node[k]).any(), (name, k)
+                        n_zero_leaves += 1
+            elif isinstance(node, dict):
+                for v in node.values():
+                    check(v)
+        check(tree["delta"])
+        if delta_rank:
+            assert n_zero_leaves > 0, name
+
+    batch = _batch(cfg)
+    lg = jax.jit(gm.loss)(pg, batch)
+    lf = jax.jit(fm.loss)(pf, batch)
+    assert float(lg) == float(lf), (float(lg), float(lf))
+
+    grg = jax.jit(jax.grad(gm.loss))(pg, batch)
+    grf = jax.jit(jax.grad(fm.loss))(pf, batch)
+    tol = 0.0 if delta_rank == 0 else 1e-6
+    for name, gtree in grg["stacks"].items():
+        base = (gtree["base"] if isinstance(gtree, dict)
+                and set(gtree) == {"base", "delta", "per"} else gtree)
+        assert _max_abs_diff(base, grf["stacks"][name]) <= tol, name
+    pre_g = {k: v for k, v in grg.items() if k != "stacks"}
+    pre_f = {k: v for k, v in grf.items() if k != "stacks"}
+    assert _max_abs_diff(pre_g, pre_f) <= tol
+
+
+def test_grouped_param_count_and_shapes():
+    """Tied leaves exist once per group: the spec tree neither double-counts
+    nor re-initialises them, and grouping strictly shrinks the model."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    gcfg = cfg.replace(num_layer_groups=2, delta_rank=4)
+    gm, fm = Model(gcfg), Model(cfg)
+    assert gm.num_params() < fm.num_params()
+
+    layers = gm.param_specs()["stacks"]["layers"]
+    L, G = cfg.num_layers, 2
+    for leaf in jax.tree_util.tree_leaves(layers["base"],
+                                          is_leaf=spec.is_spec):
+        assert leaf.shape[0] == G
+        assert leaf.axes[0] == "groups"
+    for leaf in jax.tree_util.tree_leaves(layers["delta"],
+                                          is_leaf=spec.is_spec):
+        assert leaf.shape[0] == L
+    # count matches the by-hand sum of its three components
+    total = (spec.count_params(layers["base"])
+             + spec.count_params(layers["delta"])
+             + spec.count_params(layers["per"]))
+    assert spec.count_params(layers) == total
+
+
+def test_fan_in_skips_stacked_dims():
+    """Fan-in init scales by the per-unit core shape — the leading
+    scanned/grouped dims never contribute (the (L, d) 1-D-per-layer bug)."""
+    key = jax.random.PRNGKey(3)
+    L, d, m = 7, 64, 16
+    s = spec.ParamSpec((L, d, m), ("layers", "embed", None), "fan_in",
+                       stack_dims=1)
+    got = spec._init_leaf(s, key, "float32")
+    want = jax.random.normal(key, (L, d, m)) / np.sqrt(d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # 1-D per-layer vector: fan must be the core dim d, not the stack L
+    s1 = spec.ParamSpec((L, d), ("layers", "embed"), "fan_in", stack_dims=1)
+    got1 = spec._init_leaf(s1, key, "float32")
+    want1 = jax.random.normal(key, (L, d)) / np.sqrt(d)
+    np.testing.assert_array_equal(np.asarray(got1), np.asarray(want1))
+
+
+def test_grouped_model_validation():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    with pytest.raises(ValueError, match="divide"):
+        Model(cfg.replace(num_layer_groups=3))     # 3 does not divide 4
+    with pytest.raises(ValueError, match="reversible"):
+        Model(cfg.replace(num_layer_groups=2, reversible=False,
+                          remat_policy="block"))
+    zcfg = get_config("zamba2-7b", reduced=True)
+    with pytest.raises(ValueError, match="layer group"):
+        Model(zcfg.replace(num_layer_groups=2))
+
+
+def test_fused_unfused_parity_on_grouped_config():
+    """The fused optimizer-in-backward walk (per-layer delta/per updates +
+    once-per-group base updates) matches the monolithic step."""
+    from repro.train.trainer import make_train_step
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layer_groups=2, delta_rank=4)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = [_batch(cfg, seq=64, batch=4) for _ in range(2)]
+    opt = AdamW(lr=1e-4, weight_decay=0.01)
+
+    def run(fused):
+        p, st = params, opt.init(params)
+        step = jax.jit(make_train_step(model, opt, fused=fused))
+        for b in batches:
+            p, st, m = step(p, st, b)
+        return p, st, m
+
+    pu, su, mu = run(False)
+    pf, sf, mf = run(True)
+    assert _max_abs_diff(pu, pf) <= 1e-6
+    assert (jax.tree_util.tree_structure(su)
+            == jax.tree_util.tree_structure(sf))
+    assert _max_abs_diff(su, sf) <= 1e-5
+    np.testing.assert_allclose(float(mu["grad_norm"]),
+                               float(mf["grad_norm"]), rtol=1e-5)
+
+
+def test_grouped_sharding_replicates_group_dim():
+    """ZeRO-3/TP stay valid on the deduplicated leaves: the "groups" dim is
+    never sharded and the inner dims shard exactly like the flat layout."""
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(1, 1)
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layer_groups=2, delta_rank=4)
+    model = Model(cfg)
+    aparams = model.abstract_params()
+    pspecs = shd.param_pspecs(model.logical_axes(), aparams, mesh)
+    from jax.sharding import PartitionSpec as P
+    n_leaves = len(jax.tree_util.tree_leaves(aparams))
+    specs = jax.tree_util.tree_leaves(pspecs,
+                                      is_leaf=lambda x: isinstance(x, P))
+    assert len(specs) == n_leaves
+    gspecs = jax.tree_util.tree_leaves(
+        pspecs["stacks"]["layers"]["base"],
+        is_leaf=lambda x: isinstance(x, P))
+    for sp in gspecs:
+        assert len(sp) == 0 or sp[0] is None    # groups dim replicated
+
+
+def test_checkpoint_grouped_roundtrip_and_mismatch(tmp_path):
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layer_groups=2, delta_rank=4)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-4)
+    st = opt.init(params)
+    layouts = {s.name: s.layout.describe()
+               for s in model.stacks if s.layout is not None}
+    assert layouts["layers"]["group_map"] == [0, 0, 1, 1]
+
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, (params, st), extra_meta={"layouts": layouts})
+    (rp, rs), step = ckpt.restore(d, (params, st), layouts=layouts)
+    assert step == 3
+    assert _max_abs_diff(rp, params) == 0.0
+
+    # a different layer→group map must be refused by name, not shape
+    other = dict(layouts)
+    other["layers"] = dict(layouts["layers"], group_map=[0, 1, 0, 1])
+    with pytest.raises(ValueError, match="layer→group map"):
+        ckpt.restore(d, (params, st), layouts=other)
+    # ...and a flat target must not silently absorb a lean checkpoint
+    with pytest.raises(ValueError, match="layer→group map"):
+        ckpt.restore(d, (params, st), layouts={})
+
+
+def test_planner_reports_sharing_factor():
+    from repro.memory.planner import plan
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True).replace(
+        num_layer_groups=2, delta_rank=4)
+    p = plan(cfg, budget_gb=64.0, batch=2, seq=64, optimizer="adamw",
+             trace_check=False)
+    rep = p.report()
+    assert "sharing factor" in rep
+    assert p.lean is not None and p.lean["factor"] > 1.0
+    # ungrouped + over-budget: --layer-groups surfaces as a lever
+    p2 = plan(get_config("qwen2-moe-a2.7b", reduced=True),
+              budget_gb=0.001, batch=2, seq=64, optimizer="adamw",
+              trace_check=False)
+    assert not p2.fits and "--layer-groups" in p2.report()
