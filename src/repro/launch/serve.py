@@ -2,12 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
         [--no-reduced] [--requests 16] [--slots 4] [--gen 32] \
-        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--drain-every 4]
+        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--drain-every 4] \
+        [--paged] [--page-size 16] [--kv-pages N | --kv-budget-gb G] \
+        [--shared-prefix N] [--no-prefix-cache]
 
 Submits ``--requests`` requests with mixed prompt lengths to a
 ``ServingEngine`` (length-bucketed batched prefill, per-request seeded
 sampling, EOS/length termination on device) and reports throughput.
-Reduced (smoke-scale) configs are the default on this CPU container;
+``--paged`` serves from the block-paged KV pool with radix prefix sharing
+(DESIGN.md §15); ``--shared-prefix N`` gives every request the same
+N-token system prefix so the prefix cache has something to hit.  Reduced
+(smoke-scale) configs are the default on this CPU container;
 ``--no-reduced`` serves the full config (real accelerator only).
 """
 from __future__ import annotations
@@ -34,15 +39,35 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--drain-every", type=int, default=4)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the block-paged KV pool with radix "
+                         "prefix sharing (DESIGN.md §15)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="physical KV pages in the pool (0 -> dense-parity: "
+                         "slots * pages-per-slot)")
+    ap.add_argument("--kv-budget-gb", type=float, default=None,
+                    help="size the page pool from an HBM budget via "
+                         "memory.estimator.kv_page_cost")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="radix prefix sharing across requests (paged only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same N-token system prefix "
+                         "(exercises the prefix cache)")
+    ap.add_argument("--lookahead", type=int, default=8,
+                    help="admission queue lookahead window for same-bucket "
+                         "batching")
     ap.add_argument("--telemetry", default=None, metavar="PATH",
                     help="write a telemetry JSONL to PATH: per-request "
-                         "TTFT/TPOT, queue depth / slot utilization gauges, "
-                         "prefill+decode spans, and a post-warmup recompile "
-                         "watchdog (repro.obs; inspect with `python -m "
+                         "TTFT/TPOT, queue depth / slot utilization / page "
+                         "pool gauges, prefix-hit counters, prefill+decode "
+                         "spans, and a post-warmup recompile watchdog "
+                         "(repro.obs; inspect with `python -m "
                          "repro.launch.trace summarize PATH`)")
     ap.add_argument("--no-warmup", action="store_true",
-                    help="skip the per-bucket warmup pass (the recompile "
-                         "watchdog then has no baseline)")
+                    help="skip the workload-mirroring warmup pass (the "
+                         "recompile watchdog then has no baseline)")
     args = ap.parse_args()
 
     import jax
@@ -65,27 +90,39 @@ def main():
     from repro import obs
 
     tel = obs.as_telemetry(args.telemetry, role="serve", config=cfg.name,
-                           slots=args.slots, drain_every=args.drain_every)
-    buf = args.buf_len or (args.prompt_len + args.gen)
+                           slots=args.slots, drain_every=args.drain_every,
+                           paged=args.paged)
+    buf = args.buf_len or (args.shared_prefix + args.prompt_len + args.gen)
     eng = ServingEngine(model, params, slots=args.slots, buf_len=buf,
                         extras=extras, drain_every=args.drain_every,
-                        telemetry=tel)
+                        telemetry=tel, lookahead=args.lookahead,
+                        paged=args.paged, page_size=args.page_size,
+                        kv_pages=args.kv_pages or None,
+                        kv_budget_gb=args.kv_budget_gb,
+                        prefix_cache=args.prefix_cache)
 
     rng = np.random.default_rng(0)
+    lo = 4
+    sys_prefix = rng.integers(lo, cfg.vocab_size,
+                              size=args.shared_prefix).astype(np.int32)
     prompts = []
     for uid in range(args.requests):
         plen = int(rng.integers(4, max(5, args.prompt_len + 1)))
-        prompts.append(rng.integers(4, cfg.vocab_size,
-                                    size=plen).astype(np.int32))
+        tail = rng.integers(lo, cfg.vocab_size, size=plen).astype(np.int32)
+        prompts.append(np.concatenate([sys_prefix, tail])
+                       if args.shared_prefix else tail)
 
     if not args.no_warmup:
-        # touch every prefill bucket the workload will use, then freeze the
-        # expected compiled-signature set: any further compile is flagged by
-        # the recompile watchdog (serve.recompiles_post_warmup must stay 0)
-        buckets = sorted({eng._bucket(p.size) for p in prompts})
-        for i, b in enumerate(buckets):
-            eng.submit(Request(uid=1_000_000 + i,
-                               prompt=(np.arange(b, dtype=np.int32) % 60) + 4,
+        # warmup MIRRORS the workload — same prompt lengths, same
+        # shared-prefix structure, shifted token values — so admission
+        # touches every prefill bucket the real run will use, including the
+        # radix-shortened SUFFIX buckets in paged mode.  Then freeze the
+        # compiled-signature set: any further compile is flagged by the
+        # recompile watchdog (serve.recompiles_post_warmup must stay 0).
+        span = max(cfg.vocab_size - lo, 1)
+        for i, p in enumerate(prompts):
+            wp = (lo + (p - lo + 1) % span).astype(np.int32)
+            eng.submit(Request(uid=1_000_000 + i, prompt=wp,
                                max_new_tokens=2, eos_id=-1,
                                temperature=args.temperature, seed=i))
         eng.run()
@@ -109,6 +146,14 @@ def main():
     print(f"[serve] jit cache: {eng.jit_cache_sizes()} "
           f"(post-warmup recompiles: "
           f"{tel.counter('serve.recompiles_post_warmup').value if tel.enabled else 'n/a'})")
+    if args.paged:
+        hits = (tel.counter("serve.prefix_hits").value
+                if tel.enabled else "n/a")
+        hit_tok = (tel.counter("serve.prefix_hit_tokens").value
+                   if tel.enabled else "n/a")
+        print(f"[serve] paged: {eng.kv_pages} pages x {eng.page_size} tok "
+              f"(used {eng.page_pool.n_used}, free {eng.page_pool.n_free}), "
+              f"prefix hits {hits} ({hit_tok} tokens skipped)")
     sample = done[0].generated[:12]
     print(f"[serve] request 0 tokens: {sample}")
     if tel.enabled:

@@ -4,7 +4,7 @@
     PYTHONPATH=src python -m repro.launch.trace summarize RUN.jsonl
     PYTHONPATH=src python -m repro.launch.trace validate RUN.jsonl \
         [--require-zero-recompiles] [--max-drift 2.0] \
-        [--max-reconstruction-err 1e-3]
+        [--max-reconstruction-err 1e-3] [--min-prefix-hits N]
     PYTHONPATH=src python -m repro.launch.trace export RUN.jsonl \
         [--out trace.json]
     PYTHONPATH=src python -m repro.launch.trace trend BENCH_TRAJECTORY.jsonl \
@@ -348,6 +348,9 @@ def main(argv=None) -> int:
                            help="bound the worst per-layer relative "
                                 "reconstruction error across layer_audit "
                                 "events (fails too when audit never ran)")
+            p.add_argument("--min-prefix-hits", type=int, default=None,
+                           help="floor the final serve.prefix_hits counter "
+                                "(paged radix prefix cache, DESIGN.md §15)")
         if name == "export":
             p.add_argument("--out", default=None,
                            help="output trace path (default: RUN.trace.json)")
@@ -379,7 +382,8 @@ def main(argv=None) -> int:
         errors = validate_events(
             events, require_zero_recompiles=args.require_zero_recompiles,
             max_drift=args.max_drift,
-            max_reconstruction_err=args.max_reconstruction_err)
+            max_reconstruction_err=args.max_reconstruction_err,
+            min_prefix_hits=args.min_prefix_hits)
         if errors:
             print(f"[trace] {args.run}: INVALID")
             for e in errors:

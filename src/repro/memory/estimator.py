@@ -418,6 +418,43 @@ def attention_backward_cost(cfg: ModelConfig, batch: int, seq: int,
             "live_tile_fraction": live, "dense": dense, "flash": flash}
 
 
+def kv_page_cost(cfg: ModelConfig, page_size: int = 16,
+                 seq: int = 4096) -> dict:
+    """Serving paged-KV cost model (DESIGN.md §15): bytes per physical page
+    across every KV-carrying layer, pages per sequence at the serving
+    context length, and the dense-slot bytes the page pool replaces.
+
+    The serving engine sizes its pool from this (``kv_budget_gb``), and the
+    dryrun plan surfaces it next to the ``attn_bwd`` / ``moe_ep`` lines so
+    the serve-time KV budget is decided from the same report as the train
+    plan.  Per-token KV bytes = L * 2 (k+v) * KV_heads * head_dim *
+    itemsize; each page also stores its int32 positions (validity /
+    causal-mask source), which is what lets freed pages be remapped without
+    a device-side reset pass.
+    """
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    if cfg.family == "hybrid" and cfg.attn_period:
+        L = cfg.num_layers // cfg.attn_period    # shared attn block layers
+    else:
+        L = cfg.num_layers
+    token_bytes = L * 2 * cfg.num_kv_heads * cfg.head_dim * itemsize
+    page_bytes = page_size * token_bytes + L * page_size * 4
+    ctx = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    pages_per_seq = -(-ctx // page_size)
+    dense_slot_bytes = ctx * token_bytes + L * ctx * 4
+    return {
+        "page_size": page_size,
+        "kv_layers": L,
+        "token_bytes": token_bytes,
+        "page_bytes": page_bytes,
+        "ctx_len": ctx,
+        "pages_per_seq": pages_per_seq,
+        "seq_bytes": pages_per_seq * page_bytes,
+        "dense_slot_bytes": dense_slot_bytes,
+        "pages_per_gib": int(GiB // page_bytes),
+    }
+
+
 #: train-step cost multiplier over forward FLOPs per activation policy
 #: (benchmarks/roofline.py's accounting: standard fwd+bwd = 3x fwd, remat
 #: re-runs forward = 4x, reversible adds inverse + re-linearise = 5x;

@@ -58,6 +58,9 @@ class MemoryPlan:
     # per-MoE-layer expert-parallel a2a comm cost (estimator.ep_a2a_cost);
     # None unless cfg.expert_parallel > 0
     moe_ep: Optional[dict] = None
+    # serving paged-KV cost (estimator.kv_page_cost): bytes/page and
+    # pages/seq at this plan's seq; None for attention-free families
+    kv_page: Optional[dict] = None
     # lean layer-group sharing summary (DESIGN.md §14): set when the config
     # groups its layers — flat-equivalent params+opt bytes and the realized
     # sharing factor
@@ -102,6 +105,16 @@ class MemoryPlan:
                 f"(∝ 1/EP), expected wire "
                 f"{m['a2a_expected_wire_bytes'] / GiB:.3f} GiB, "
                 f"dense-emulation buffer {m['a2a_buffer_bytes'] / GiB:.3f} GiB")
+        if self.kv_page is not None:
+            k = self.kv_page
+            lines.append(
+                f"  serve kv pages (page={k['page_size']}, "
+                f"{k['kv_layers']} kv layers): "
+                f"{k['page_bytes'] / 2**20:.3f} MiB/page, "
+                f"{k['pages_per_seq']} pages/seq @ {k['ctx_len']} "
+                f"({k['seq_bytes'] / GiB:.3f} GiB vs dense slot "
+                f"{k['dense_slot_bytes'] / GiB:.3f} GiB), "
+                f"{k['pages_per_gib']} pages/GiB")
         if self.lean is not None:
             le = self.lean
             lines.append(
@@ -199,6 +212,8 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
                 else est_mod.attention_backward_cost(cfg, batch, seq))
     moe_ep = (est_mod.ep_a2a_cost(cfg, batch, seq)
               if cfg.expert_parallel > 0 else None)
+    kv_page = (None if cfg.family == "ssm"
+               else est_mod.kv_page_cost(cfg, seq=seq))
     lean = _lean_info(cfg, optimizer)
     grouping_available = (not cfg.num_layer_groups and cfg.reversible
                           and cfg.family != "hybrid")
@@ -227,7 +242,8 @@ def plan(cfg: ModelConfig, budget_gb: Optional[float] = None,
             budget_bytes=budget, policies=policies, est=e,
             device_bytes=device, host_bytes=e.host_total(policies),
             fits=device <= budget, attn_bwd=attn_bwd, moe_ep=moe_ep,
-            lean=lean, grouping_available=grouping_available)
+            kv_page=kv_page, lean=lean,
+            grouping_available=grouping_available)
         if best.fits:
             return best
     return best

@@ -195,10 +195,19 @@ def _attend_cache(q, k, v, mask, cfg: ModelConfig):
 
 
 def attention_decode(p, cfg: ModelConfig, xq, xkv, cache, t, *,
-                     window=None, rolling: bool = False, use_rope: bool = True):
+                     window=None, rolling: bool = False, use_rope: bool = True,
+                     length=None):
     """Self-attention with a KV buffer.  Writes xkv's K/V at position t
     (rolling buffers write at t % buf_len, Sq must be 1), attends over the
     whole buffer with validity/causal/window masking by stored positions.
+
+    ``length`` (optional traced scalar): the real token count when a
+    longer-than-buffer prefill is right-padded to Sq > real length.  The
+    long-prefill path then keeps the last ``min(length, C)`` REAL positions
+    in the rolling buffer instead of the last C entries of the padded
+    stream — without it every pad token would displace one real window
+    entry, which is why bucketed (padded) windowed prefill used to require
+    exact lengths and a compile per prompt length.
     """
     B, Sq, _ = xq.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -235,10 +244,23 @@ def attention_decode(p, cfg: ModelConfig, xq, xkv, cache, t, *,
         else:
             out = att_block(q, pos_q[0])
         out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
-        shift = (Sq - C) % C       # place pos p at slot p % C (static ints)
-        ck = jnp.roll(k[:, -C:].astype(cache["k"].dtype), shift, axis=1)
-        cv = jnp.roll(v[:, -C:].astype(cache["v"].dtype), shift, axis=1)
-        cpos = jnp.roll(pos_q[0, -C:], shift)
+        if length is None:
+            shift = (Sq - C) % C   # place pos p at slot p % C (static ints)
+            ck = jnp.roll(k[:, -C:].astype(cache["k"].dtype), shift, axis=1)
+            cv = jnp.roll(v[:, -C:].astype(cache["v"].dtype), shift, axis=1)
+            cpos = jnp.roll(pos_q[0, -C:], shift)
+        else:
+            # right-padded stream: keep the last min(length, C) REAL tokens,
+            # each at slot (token index) % C.  Pad queries attend to junk but
+            # their outputs are discarded by the caller; pad keys sit beyond
+            # every real query so the causal mask already excludes them.
+            start = jnp.maximum(length - C, 0)
+            j = jnp.arange(C, dtype=jnp.int32)
+            idx = start + jnp.mod(j - start, C)     # token index held by slot j
+            valid = idx < length
+            ck = jnp.take(k, idx, axis=1).astype(cache["k"].dtype)
+            cv = jnp.take(v, idx, axis=1).astype(cache["v"].dtype)
+            cpos = jnp.where(valid, jnp.take(pos_q[0], idx), -1)
         return out, {"k": ck, "v": cv, "pos": cpos}
 
     slot = jax.lax.rem(t, C) if rolling else t
@@ -267,6 +289,64 @@ def attention_decode(p, cfg: ModelConfig, xq, xkv, cache, t, *,
         out = att_cached(q, pos_q[0])
     out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
     return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def attention_decode_paged(p, cfg: ModelConfig, xq, xkv, pool, page_table, t,
+                           *, write_mask, window=None, rolling: bool = False,
+                           kv_len: Optional[int] = None, use_rope: bool = True,
+                           impl: Optional[str] = None):
+    """Paged decode self-attention (DESIGN.md §15): one layer's KV state
+    lives in a pool of physical pages shared across slots; a per-slot page
+    table maps logical positions to pages.
+
+    xq/xkv: (B, 1, d) — decode only (prefill runs on the dense path and is
+    scattered into pages by the engine).  t: (B,) per-slot positions.
+    pool: {"k"/"v": (P, page, KV, hd), "pos": (P, page)}.
+    page_table: (B, n_pages) int32, -1 = unmapped.
+    write_mask: (B,) bool — rows NOT selected write nothing (their pages may
+    have been freed and remapped to another request; the dense engine can
+    tolerate garbage writes into inactive slots, the pool cannot).
+
+    The new K/V is scattered at logical slot ``t`` (``t % C`` when rolling)
+    through the page table; attention then reads every mapped page.  The
+    off-TPU implementation gathers the pages and reuses the dense decode
+    einsum verbatim, so paged and dense decode are bit-identical — the
+    equivalence gate in tests/test_serving.py leans on this.
+    """
+    from repro.kernels import paged_attention as pk
+
+    B = xq.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    P, page = pool["pos"].shape
+    n_pages = page_table.shape[1]
+    C = kv_len if kv_len is not None else n_pages * page
+
+    pos_q = t[:, None]                                          # (B, 1)
+    q = _proj(xq, p["wq"], p.get("bq")).reshape(B, 1, H, hd)
+    k = _proj(xkv, p["wk"], p.get("bk")).reshape(B, 1, KV, hd)
+    v = _proj(xkv, p["wv"], p.get("bv")).reshape(B, 1, KV, hd)
+    if use_rope:
+        q = rope(q, pos_q, cfg.rope_theta)
+        k = rope(k, pos_q, cfg.rope_theta)
+
+    slot = jax.lax.rem(t, C) if rolling else t
+    page_idx = jnp.clip(slot // page, 0, n_pages - 1)
+    off = slot % page
+    phys = page_table[jnp.arange(B), page_idx]                  # (B,)
+    # masked rows scatter to index P == out-of-bounds -> dropped
+    phys = jnp.where(write_mask & (phys >= 0) & (slot < C), phys, P)
+    nk = pool["k"].at[phys, off].set(k[:, 0].astype(pool["k"].dtype),
+                                     mode="drop")
+    nv = pool["v"].at[phys, off].set(v[:, 0].astype(pool["v"].dtype),
+                                     mode="drop")
+    npos = pool["pos"].at[phys, off].set(pos_q[:, 0], mode="drop")
+    new_pool = {"k": nk, "v": nv, "pos": npos}
+
+    out = pk.paged_attention(q[:, 0], nk, nv, npos, page_table, t,
+                             kv_len=C, window=window,
+                             softcap=cfg.logit_softcap, impl=impl)
+    out = jnp.einsum("bsk,kd->bsd", out[:, None], p["wo"])
+    return out, new_pool
 
 
 def cross_attention_decode(p, cfg: ModelConfig, xq, kv_cache):

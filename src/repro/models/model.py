@@ -60,6 +60,12 @@ class StackDef:
     layout: Optional[spec.GroupLayout] = None  # layer-group tie map: when
     #   set, the stack's params are {"base", "delta", "per"} (DESIGN.md §14)
     #   and every walk reads units through the group indirection
+    decode_paged: Optional[Callable] = None  # (lp, sh, ctx, i, x1, x2,
+    #   pool_unit, page_table, write_mask) -> ((y1, y2), pool_unit) — decode
+    #   step against the paged KV pool (DESIGN.md §15); None => family has
+    #   no paged layout (recurrent state etc.)
+    pool_init: Optional[Callable] = None  # (n_pages, page_size, dtype) ->
+    #   one unit's page-pool leaves (stacked over units by init_kv_pool)
 
 
 # ===================================================================== helpers
@@ -222,13 +228,31 @@ def build_dense(cfg: ModelConfig, use_moe: bool = False):
         kv_in = _up(lp["attn_ad"], rms_norm(x2, lp["norm2"], cfg.norm_eps))
         att, nkv = attention_decode(lp["attn"], cfg, q_in, kv_in, cu["kv"],
                                     ctx["t"], window=window_fn(i) if window_fn else None,
-                                    rolling=rolling)
+                                    rolling=rolling, length=ctx.get("seq_len"))
         y1 = x1 + _down(lp["attn_ad"], att)
         y2 = x2 + G(lp, sh, ctx, i, y1)
         return (y1, y2), {"kv": nkv}
 
     def cache_init(lp, B, buf, dtype, extras):
         return {"kv": init_kv_cache(cfg, B, buf, dtype)}
+
+    def decode_paged(lp, sh, ctx, i, x1, x2, pu, pt, wmask):
+        q_in = _up(lp["attn_ad"], rms_norm(x1, lp["norm1"], cfg.norm_eps))
+        kv_in = _up(lp["attn_ad"], rms_norm(x2, lp["norm2"], cfg.norm_eps))
+        att, npu = common.attention_decode_paged(
+            lp["attn"], cfg, q_in, kv_in, pu["kv"], pt, ctx["t"],
+            write_mask=wmask, window=window_fn(i) if window_fn else None,
+            rolling=rolling, kv_len=ctx["kv_len"])
+        y1 = x1 + _down(lp["attn_ad"], att)
+        y2 = x2 + G(lp, sh, ctx, i, y1)
+        return (y1, y2), {"kv": npu}
+
+    def pool_init(n_pages, page_size, dtype):
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"kv": {
+            "k": jnp.zeros((n_pages, page_size, KV, hd), dtype),
+            "v": jnp.zeros((n_pages, page_size, KV, hd), dtype),
+            "pos": jnp.full((n_pages, page_size), -1, jnp.int32)}}
 
     def half_inv(lp, sh, ctx, i, x1, y1, y2):
         return y2 - G(lp, sh, ctx, i, y1)
@@ -251,7 +275,8 @@ def build_dense(cfg: ModelConfig, use_moe: bool = False):
     return [StackDef("layers", cfg.num_layers, _dense_sub_specs(cfg, use_moe),
                      fwd, inv, decode, cache_init,
                      std_fwd=_std_block(cfg, use_moe), half_inv=half_inv,
-                     moe_tap=moe_tap)], {}
+                     moe_tap=moe_tap, decode_paged=decode_paged,
+                     pool_init=pool_init)], {}
 
 
 def build_moe(cfg: ModelConfig):
@@ -960,18 +985,20 @@ class Model:
                     params["stacks"][s.name])
         return caches
 
-    def decode_step_hidden(self, params, cache, token):
+    def decode_step_hidden(self, params, cache, token, *, seq_len=None):
         """Decode/prefill step up to the final norm — the hook the serving
         engine fuses sampling onto.  token: (B, Sq) — Sq=1 for decode, Sq=S
         for (non-rolling) prefill.  Returns (h (B, Sq, d), new_cache); callers
         that only need one position (batched bucketed prefill reads the last
         real position per row) gather from ``h`` and apply ``lm_logits`` there
-        instead of materialising (B, Sq, V) logits."""
+        instead of materialising (B, Sq, V) logits.  ``seq_len`` (optional
+        traced scalar): real token count of a right-padded prefill — lets the
+        longer-than-window path keep the real tail instead of pad tokens."""
         cfg = self.cfg
         B, Sq = token.shape
         t = cache["t"]
         h = jnp.take(params["embed"], token, axis=0)
-        ctx = {"t": t,
+        ctx = {"t": t, "seq_len": seq_len,
                "positions": t + jnp.broadcast_to(
                    jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))}
         shared = self._shared(params, None)
@@ -1009,3 +1036,76 @@ class Model:
         Returns (logits (B, Sq, V), new_cache)."""
         h, new_cache = self.decode_step_hidden(params, cache, token)
         return self.lm_logits(params, h), new_cache
+
+    # ------------------------------------------------------- paged decode
+
+    def paged_supported(self) -> bool:
+        """True when every main stack has a paged decode path (attention-KV
+        cache layouts only — recurrent/hybrid state has no page structure)."""
+        main = [s for s in self.stacks if s.role == "main"]
+        return bool(main) and all(s.decode_paged is not None
+                                  and s.pool_init is not None for s in main)
+
+    def init_kv_pool(self, n_pages: int, page_size: int):
+        """Paged KV storage (DESIGN.md §15): per main stack, pool leaves with
+        a leading layer axis — k/v (L, P, page, KV, hd) and stored positions
+        (L, P, page).  Physical pages are shared across slots; per-slot page
+        tables (engine-owned) map logical positions into the pool."""
+        if not self.paged_supported():
+            raise ValueError(
+                f"config {self.cfg.name} (family {self.cfg.family}) has no "
+                "paged KV layout — paged serving supports attention-KV "
+                "families only")
+        dtype = jnp.dtype(self.cfg.dtype)
+        pools = {}
+        for s in self.stacks:
+            if s.role != "main":
+                continue
+            one = s.pool_init(n_pages, page_size, dtype)
+            pools[s.name] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (s.n,) + a.shape).copy(), one)
+        return pools
+
+    def decode_step_hidden_paged(self, params, pools, page_tables, t, token,
+                                 write_mask, *, kv_len: int):
+        """One decode step against the paged KV pool.  token: (B, 1);
+        t: (B,) per-slot positions (unlike the dense path, slots advance
+        independently — no vmap over per-slot cache trees); page_tables:
+        (B, n_pages); write_mask: (B,) — rows not selected must not write
+        (their pages may belong to someone else now).  Returns
+        (h (B, 1, d), new_pools)."""
+        cfg = self.cfg
+        B, Sq = token.shape
+        assert Sq == 1, "paged decode is single-position"
+        h = jnp.take(params["embed"], token, axis=0)
+        ctx = {"t": t, "kv_len": kv_len, "positions": t[:, None]}
+        shared = self._shared(params, None)
+        x1, x2 = split_streams(h)
+        new_pools = {}
+        for s in self.stacks:
+            if s.role != "main":
+                continue
+            idxs = jnp.arange(s.n, dtype=jnp.int32)
+            if s.layout is not None:
+                gp = params["stacks"][s.name]
+
+                def gbody(carry, inp, s=s, gp=gp):
+                    i, pu = inp
+                    lp = read_unit(s.layout, gp, i)
+                    (a, b), npu = s.decode_paged(lp, shared, ctx, i, *carry,
+                                                 pu, page_tables, write_mask)
+                    return (a, b), npu
+                (x1, x2), npool = jax.lax.scan(
+                    gbody, (x1, x2), (idxs, pools[s.name]))
+            else:
+                def body(carry, inp, s=s):
+                    i, lp, pu = inp
+                    (a, b), npu = s.decode_paged(lp, shared, ctx, i, *carry,
+                                                 pu, page_tables, write_mask)
+                    return (a, b), npu
+                (x1, x2), npool = jax.lax.scan(
+                    body, (x1, x2),
+                    (idxs, params["stacks"][s.name], pools[s.name]))
+            new_pools[s.name] = npool
+        h = rms_norm(merge_streams(x1, x2), params["final_norm"], cfg.norm_eps)
+        return h, new_pools

@@ -141,7 +141,8 @@ def _find_nonfinite(obj, path=""):
 def validate_events(events: List[dict], *,
                     require_zero_recompiles: bool = False,
                     max_drift: Optional[float] = None,
-                    max_reconstruction_err: Optional[float] = None
+                    max_reconstruction_err: Optional[float] = None,
+                    min_prefix_hits: Optional[int] = None
                     ) -> List[str]:
     """Returns a list of human-readable schema violations (empty = valid).
 
@@ -155,6 +156,9 @@ def validate_events(events: List[dict], *,
     ``max_reconstruction_err`` bounds the worst per-layer relative
     reconstruction error across all ``layer_audit`` events (the reversible
     audit gate, DESIGN.md §12) — and fails if audit mode never emitted one.
+    ``min_prefix_hits`` floors the final ``serve.prefix_hits`` counter (the
+    paged radix cache, DESIGN.md §15) — a shared-prompt workload that never
+    hits means the prefix cache silently stopped matching.
     """
     errors: List[str] = []
     if not events:
@@ -169,6 +173,7 @@ def validate_events(events: List[dict], *,
     last_drift = None
     worst_recon = None
     recompiles = 0
+    prefix_hits = None
     for i, ev in enumerate(events):
         for field in ("v", "kind", "ts"):
             if field not in ev:
@@ -200,9 +205,18 @@ def validate_events(events: List[dict], *,
             for name, value in counters.items():
                 if name.endswith("recompiles_post_warmup"):
                     recompiles = max(recompiles, int(value))
+                elif name == "serve.prefix_hits":
+                    prefix_hits = int(value)
 
     if require_zero_recompiles and recompiles:
         errors.append(f"{recompiles} post-warmup recompile(s)")
+    if min_prefix_hits is not None:
+        if prefix_hits is None:
+            errors.append("no serve.prefix_hits counter in the final "
+                          "snapshot (paged prefix cache never engaged)")
+        elif prefix_hits < min_prefix_hits:
+            errors.append(f"serve.prefix_hits {prefix_hits} < "
+                          f"{min_prefix_hits}")
     if max_drift is not None:
         if last_drift is None:
             errors.append("no train_window event carries mem_drift_x "

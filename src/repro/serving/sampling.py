@@ -59,7 +59,13 @@ def sample_token(logits, key, temperature, top_k, top_p):
     keep = jnp.arange(V) < k_eff
     # keep the token that crosses the top_p boundary (prefix mass < p)
     keep &= (cum - probs) < top_p
-    keep = keep.at[0].set(True)                 # never mask everything
+    # degenerate-knob clamp: at top_p = 0 (or below the top token's own
+    # mass) the boundary rule keeps NOTHING — prefix mass 0 is not < 0 —
+    # and the masked argmax would pick from an all -inf row.  The
+    # top-probability token (sorted index 0) is always kept, so top_p -> 0
+    # degrades to greedy instead of garbage; same guard covers top_k <= 0
+    # after clamping and extreme logit ties.
+    keep = keep.at[0].set(True)
     masked = jnp.where(keep, scaled, -jnp.inf)
     choice = jnp.argmax(masked + jax.random.gumbel(key, (V,)))
     sampled = sorted_i[choice]

@@ -108,6 +108,20 @@ def test_validation_recompile_and_drift_gates():
                            max_drift=2.0) == []
 
 
+def test_validation_prefix_hit_floor():
+    sink = JsonlSink()
+    sink.emit("run_start", meta={})
+    sink.emit("run_end", metrics={"counters": {"serve.prefix_hits": 2}})
+    assert validate_events(sink.events, min_prefix_hits=1) == []
+    assert any("prefix_hits 2 < 3" in e
+               for e in validate_events(sink.events, min_prefix_hits=3))
+    bare = JsonlSink()
+    bare.emit("run_start", meta={})
+    bare.emit("run_end", metrics={"counters": {}})
+    assert any("never engaged" in e
+               for e in validate_events(bare.events, min_prefix_hits=1))
+
+
 def test_bench_json_writer(tmp_path):
     path = str(tmp_path / "BENCH_x.json")
     write_bench_json(path, "x", {"tok_s": 12.5}, config="tiny")
@@ -359,12 +373,15 @@ def test_engine_counts_admission_rejects(engine_run):
 
     _, eng, tel = engine_run
     before = tel.counter("serve.admission_rejects").value
-    with pytest.raises(ValueError, match="cache slots"):
-        eng.submit(Request(uid=99, prompt=np.arange(60, dtype=np.int32),
-                           max_new_tokens=30))
+    # oversize is a TERMINAL reject, not an exception: the request
+    # completes with an empty generation and the rejected flag set
+    req = eng.submit(Request(uid=99, prompt=np.arange(60, dtype=np.int32),
+                             max_new_tokens=30))
+    assert req.rejected and req.generated == []
+    assert eng.done[99] is req
     assert tel.counter("serve.admission_rejects").value == before + 1
     ev = [e for e in tel.sink.events if e["kind"] == "admission_reject"]
-    assert ev and ev[-1]["uid"] == 99
+    assert ev and ev[-1]["uid"] == 99 and ev[-1]["what"] == "buf_len"
 
 
 def test_engine_recompile_watchdog_flags_new_bucket(engine_run):

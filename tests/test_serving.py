@@ -51,11 +51,23 @@ def test_engine_matches_per_sequence_decode(small_model):
 
 
 def test_engine_rejects_oversized_request(small_model):
+    """An oversize request is terminally rejected (empty generation,
+    ``rejected`` flag, done immediately) instead of raising — submitting it
+    must not disturb valid requests before or after it in the stream."""
     cfg, model, params = small_model
     eng = ServingEngine(model, params, slots=1, buf_len=16)
-    with pytest.raises(ValueError, match="cache slots"):
-        eng.submit(Request(uid=0, prompt=np.arange(12, dtype=np.int32),
-                           max_new_tokens=8))
+    eng.submit(Request(uid=0, prompt=np.array([4, 5, 6], np.int32),
+                       max_new_tokens=3))
+    big = eng.submit(Request(uid=1, prompt=np.arange(12, dtype=np.int32),
+                             max_new_tokens=8))
+    assert big.rejected and big.generated == [] and 1 in eng.done
+    eng.submit(Request(uid=2, prompt=np.array([7, 8], np.int32),
+                       max_new_tokens=3))
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2]
+    assert done[1].rejected and done[1].generated == []
+    assert len(done[0].generated) == 3 and len(done[2].generated) == 3
+    assert not done[0].rejected and not done[2].rejected
 
 
 def test_engine_more_requests_than_slots(small_model):
@@ -234,20 +246,20 @@ def test_no_recompile_within_warm_buckets(small_model):
     assert eng.jit_cache_sizes() == warm
 
 
-def test_bucket_never_pads_past_rolling_window(small_model):
-    """A prefill longer than the rolling kv buffer keeps only the last C
-    positions of the PADDED stream — every pad token displaces one real
-    window entry.  Prompts whose bucket exceeds the window must therefore
-    prefill at exact length (padding is only transparent while the whole
-    bucket fits the buffer)."""
+def test_bucket_stays_pow2_past_rolling_window(small_model):
+    """Prompts longer than the rolling kv buffer still pad to pow2 buckets
+    (compile count stays O(log buf_len), no per-length escape hatch):
+    prefill passes the REAL length into the cache splice, so the
+    length-aware window gather keeps the last C real positions and padding
+    never displaces a window entry."""
     cfg, model, params = small_model
     eng = ServingEngine(model, params, slots=1, buf_len=256)
     C = min(256, cfg.sliding_window)
     assert eng._bucket(5) == 8                      # bucket fits buffer: pad
     assert eng._bucket(C) == C                      # exact pow2, no padding
-    for n in (C + 5, 2 * C + 1):                    # bucket > C: exact length
-        assert eng._bucket(n) == n
-    # decode through the exact-length long-prompt path stays exact vs the
+    for n in (C + 5, 2 * C + 1):                    # bucket > C: still pow2
+        assert eng._bucket(n) == min(1 << (n - 1).bit_length(), 256)
+    # decode through the padded long-prompt path stays exact vs the
     # per-sequence reference
     prompt = np.arange(4, 4 + C + 5, dtype=np.int32) % 100 + 4
     ref = _greedy_ref(model, params, prompt, 3, 256)
